@@ -1,0 +1,49 @@
+"""Beyond-paper ablations of the SA model (the paper's optional dimensions):
+
+  * array-size sweep — how the skew's saving scales with R (the saving is
+    ~R cycles/tile, so bigger arrays gain more on latency-bound layers);
+  * input-format sweep — the paper evaluates Bfloat16; FP8 halves the
+    multiplier but the exponent path (the skew's target) stays, so the
+    cycle-level saving is format-independent while area/power scale down;
+  * batch amortization — streaming more rows (M) amortizes the fill: the
+    skew's advantage decays as 1/M (the Fig. 7/8 'early layer' effect).
+"""
+from __future__ import annotations
+
+from repro.core import energy as E
+from repro.core.systolic import BASELINE, SKEWED, SAConfig, gemm_latency
+
+
+def rows():
+    out = []
+    # 1. array-size sweep (MobileNet totals)
+    for n in (64, 128, 256):
+        t = E.network_totals("mobilenet", rows=n, cols=n)
+        out.append({"table": "ablate_array", "array": f"{n}x{n}",
+                    "latency_saving_pct": round(100 * t["latency_saving"], 1),
+                    "energy_saving_pct": round(100 * t["energy_saving"], 1)})
+    # 2. format sweep: cycle savings are format-independent (the pipeline
+    # reorganization is in the exponent path); report per-GEMM cycles
+    for fmt, rel_area in (("bf16", 1.00), ("fp8_e4m3", 0.52), ("fp8_e5m2", 0.52)):
+        cb = gemm_latency(49, 1024, 1024, SAConfig(pipeline=BASELINE))
+        cs = gemm_latency(49, 1024, 1024, SAConfig(pipeline=SKEWED))
+        out.append({"table": "ablate_format", "format": fmt,
+                    "cycles_base": cb, "cycles_skew": cs,
+                    "saving_pct": round(100 * (1 - cs / cb), 1),
+                    "rel_pe_area_est": rel_area})
+    # 3. batch amortization: skew saving vs streamed rows M
+    for m in (1, 16, 128, 1024, 16384):
+        cb = gemm_latency(m, 1024, 1024, SAConfig(pipeline=BASELINE))
+        cs = gemm_latency(m, 1024, 1024, SAConfig(pipeline=SKEWED))
+        out.append({"table": "ablate_batch", "M": m,
+                    "saving_pct": round(100 * (1 - cs / cb), 2)})
+    return out
+
+
+def main():
+    for r in rows():
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Kernel micro-bench: sa_matmul (interpret) vs the jnp reference, the
+bit-exact fp_emu datapath kernel, and the fp8 quantize kernel.
+
+Wall times on this CPU container are interpret-mode numbers (the kernels
+target TPU); the point of the table is correctness overhead accounting and
+block-shape behaviour, not absolute speed.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fpformats import BF16, quantize_np
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args).block_until_ready()      # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.tree.map(lambda x: x.block_until_ready(), out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def rows():
+    rng = np.random.default_rng(0)
+    out = []
+    for m, k, n in ((256, 256, 256), (512, 1024, 512)):
+        a = jnp.asarray(quantize_np(rng.standard_normal((m, k)), BF16),
+                        jnp.bfloat16)
+        w = jnp.asarray(quantize_np(rng.standard_normal((k, n)), BF16),
+                        jnp.bfloat16)
+        us_ref = _time(lambda a, w: ref.sa_matmul_ref(a, w), a, w)
+        for bm, bn, bk in ((128, 128, 256), (256, 256, 512)):
+            us = _time(lambda a, w: ops.sa_matmul(a, w, bm=bm, bn=bn, bk=bk),
+                       a, w)
+            err = float(jnp.max(jnp.abs(
+                ops.sa_matmul(a, w, bm=bm, bn=bn, bk=bk)
+                - ref.sa_matmul_ref(a, w))))
+            out.append({"table": "kernel", "name":
+                        f"sa_matmul_{m}x{k}x{n}_b{bm}.{bn}.{bk}",
+                        "us_per_call": round(us, 1),
+                        "ref_us": round(us_ref, 1),
+                        "max_abs_err": f"{err:.2e}"})
+    # bit-exact datapath kernel
+    a = quantize_np(rng.standard_normal((64, 96)), BF16)
+    w = quantize_np(rng.standard_normal((96, 32)), BF16)
+    us = _time(lambda a, w: ops.skewed_datapath_matmul(a, w),
+               jnp.asarray(a), jnp.asarray(w))
+    bit = np.array_equal(
+        np.asarray(ops.skewed_datapath_matmul(jnp.asarray(a),
+                                              jnp.asarray(w))).view(np.uint32),
+        ref.chained_fma_ref(a, w).view(np.uint32))
+    out.append({"table": "kernel", "name": "fp_emu_skewed_64x96x32",
+                "us_per_call": round(us, 1), "bit_exact_vs_model": bit})
+    # quantize kernel
+    x = jnp.asarray(rng.standard_normal((1024, 256)).astype(np.float32))
+    s = ops.amax_scale(x, "fp8_e4m3")
+    us = _time(lambda x: ops.quantize_fp8(x, s, "fp8_e4m3", interpret=True), x)
+    out.append({"table": "kernel", "name": "quantize_fp8_e4m3_262k",
+                "us_per_call": round(us, 1)})
+    return out
+
+
+def main():
+    for r in rows():
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+
+
+if __name__ == "__main__":
+    main()

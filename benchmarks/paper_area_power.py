@@ -1,0 +1,28 @@
+"""Paper §IV synthesis table: area/power of the two designs (128×128 SA)."""
+from repro.core import energy as E
+from repro.core.systolic import BASELINE, SKEWED, SAConfig
+
+
+def rows():
+    out = []
+    for pipe in (BASELINE, SKEWED):
+        sa = SAConfig(pipeline=pipe)
+        out.append({
+            "table": "area_power", "design": pipe,
+            "rel_area": E.REL_AREA[pipe], "rel_power": E.REL_POWER[pipe],
+            "area_mm2": round(E.array_area_mm2(sa), 2),
+            "power_w": round(E.array_power_w(sa), 2),
+        })
+    out.append({"table": "area_power", "design": "overhead",
+                "rel_area": f"+{(E.REL_AREA[SKEWED]-1)*100:.0f}% (paper +9%)",
+                "rel_power": f"+{(E.REL_POWER[SKEWED]-1)*100:.0f}% (paper +7%)"})
+    return out
+
+
+def main():
+    for r in rows():
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper Figs. 7 & 8 + §IV headline: per-layer and total latency/energy of
+MobileNet and ResNet50 on the 128×128 SA, baseline vs skewed pipeline."""
+from __future__ import annotations
+
+from repro.core import energy as E
+
+PAPER = {"mobilenet": {"latency": 0.16, "energy": 0.08},
+         "resnet50": {"latency": 0.21, "energy": 0.11}}
+
+
+def rows():
+    out = []
+    for net in ("mobilenet", "resnet50"):
+        reps = E.network_report(net)
+        for r in reps:
+            out.append({
+                "table": f"fig7/8:{net}", "layer": r.layer,
+                "cycles_base": r.cycles_base, "cycles_skew": r.cycles_skew,
+                "energy_base_uj": round(r.energy_base, 3),
+                "energy_skew_uj": round(r.energy_skew, 3),
+                "energy_saving_pct": round(100 * r.energy_saving, 2),
+            })
+        t = E.network_totals(net)
+        out.append({
+            "table": f"headline:{net}", "layer": "TOTAL",
+            "latency_saving_pct": round(100 * t["latency_saving"], 2),
+            "paper_latency_pct": 100 * PAPER[net]["latency"],
+            "energy_saving_pct": round(100 * t["energy_saving"], 2),
+            "paper_energy_pct": 100 * PAPER[net]["energy"],
+        })
+        # sensitivity to the depthwise mapping (paper under-specifies it)
+        for mode in ("per_channel", "offload"):
+            tm = E.network_totals(net, dw_mode=mode)
+            out.append({
+                "table": f"dw-sensitivity:{net}", "layer": f"TOTAL[{mode}]",
+                "latency_saving_pct": round(100 * tm["latency_saving"], 2),
+                "energy_saving_pct": round(100 * tm["energy_saving"], 2),
+            })
+    return out
+
+
+def main():
+    for r in rows():
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+    for net in ("mobilenet", "resnet50"):
+        t = E.network_totals(net)
+        ok_l = abs(t["latency_saving"] - PAPER[net]["latency"]) < 0.04
+        ok_e = abs(t["energy_saving"] - PAPER[net]["energy"]) < 0.04
+        print(f"# {net}: latency {t['latency_saving']:.1%} "
+              f"(paper {PAPER[net]['latency']:.0%}, {'OK' if ok_l else 'OFF'}), "
+              f"energy {t['energy_saving']:.1%} "
+              f"(paper {PAPER[net]['energy']:.0%}, {'OK' if ok_e else 'OFF'})")
+
+
+if __name__ == "__main__":
+    main()

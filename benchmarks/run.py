@@ -1,0 +1,27 @@
+"""Benchmark orchestrator: one section per paper table/figure + the roofline
+report. Prints ``name,us_per_call,derived`` style CSV lines per section."""
+from __future__ import annotations
+
+import time
+
+
+def _section(name, fn):
+    print(f"## {name}")
+    t0 = time.time()
+    fn()
+    print(f"## {name} done in {time.time()-t0:.1f}s\n")
+
+
+def main() -> None:
+    from benchmarks import (ablations, kernel_bench, paper_area_power,
+                            paper_latency_energy, roofline)
+    _section("paper_latency_energy (Figs 7-8, §IV headline)",
+             paper_latency_energy.main)
+    _section("paper_area_power (§IV synthesis)", paper_area_power.main)
+    _section("ablations (array size / format / batch)", ablations.main)
+    _section("kernel_bench (Pallas interpret)", kernel_bench.main)
+    _section("roofline (from dry-run artifacts)", roofline.main)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Quickstart: train a tiny LM end-to-end on CPU in ~a minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import reduced_config
+from repro.data.pipeline import SyntheticLM
+from repro.train.optimizer import AdamW, warmup_cosine
+from repro.train.step import make_train_step
+from repro.train.train_state import init_state
+
+
+def main():
+    cfg = reduced_config("gemma2-9b")       # tiny structural twin
+    print(f"arch={cfg.name} layers={cfg.num_layers} d={cfg.d_model} "
+          f"params={cfg.param_count()/1e6:.2f}M")
+    steps = 40
+    opt = AdamW(schedule=warmup_cosine(3e-3, 4, steps), weight_decay=0.0)
+    step = jax.jit(make_train_step(cfg, opt, accum_steps=2))
+    state = init_state(jax.random.key(0), cfg, opt)
+    data = SyntheticLM(cfg.vocab_size, seq_len=64, batch_per_host=8,
+                       structured=True)   # learnable arithmetic sequences
+    first = last = None
+    for i, batch in zip(range(steps), data):
+        state, m = step(state, {k: jnp.asarray(v) for k, v in batch.items()})
+        if i == 0:
+            first = float(m["loss"])
+        last = float(m["loss"])
+        if (i + 1) % 10 == 0:
+            print(f"step {i+1:3d}  loss {float(m['loss']):.4f}  "
+                  f"lr {float(m['lr']):.2e}")
+    print(f"loss: {first:.4f} → {last:.4f} "
+          f"({'improved' if last < first else 'check config'})")
+
+
+if __name__ == "__main__":
+    main()

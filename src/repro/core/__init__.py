@@ -1,0 +1,13 @@
+"""Core: the paper's contribution — reduced-precision SA arithmetic with
+skewed pipelines — plus the models that reproduce its claims."""
+from .fpformats import (BF16, FP8_E4M3, FP8_E5M2, FP16, FP32, FORMATS,
+                        FPFormat, get_format, quantize)
+from .precision import PrecisionPolicy, DEFAULT_POLICY, sa_dot, sa_einsum, use_policy
+from .systolic import BASELINE, SKEWED, SAConfig, gemm_latency, speedup
+
+__all__ = [
+    "BF16", "FP8_E4M3", "FP8_E5M2", "FP16", "FP32", "FORMATS", "FPFormat",
+    "get_format", "quantize", "PrecisionPolicy", "DEFAULT_POLICY", "sa_dot",
+    "sa_einsum", "use_policy", "BASELINE", "SKEWED", "SAConfig",
+    "gemm_latency", "speedup",
+]

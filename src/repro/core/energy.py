@@ -1,0 +1,112 @@
+"""Area / power / energy model for the two SA pipeline designs (paper §IV).
+
+The paper's synthesis results (Catapult HLS → Oasys, 45 nm, 1 GHz, 128×128
+PEs, Bfloat16 inputs / FP32 reduction, power via PowerPro):
+
+  * skewed design area  = 1.09 × baseline  (extra pipeline registers for the
+    intermediate ê / LZA forwards + the exponent-fix logic)
+  * skewed design power = 1.07 × baseline  (average, across CNN layers)
+
+Energy per layer is `power × latency`; the paper's headline result is that the
+skew's latency savings amortize its power overhead: per-layer energy *rises*
+for early CNN layers (M ≫ array fill time ⇒ tiny latency gain < 7 % power
+cost) and *falls* sharply for late layers (small spatial M, many K/N tiles ⇒
+the 2R→R fill saving dominates) — Figs. 7 & 8 — netting −8 % (MobileNet) /
+−11 % (ResNet50) total energy.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .systolic import BASELINE, SKEWED, SAConfig
+from . import workloads as wl
+
+# Paper §IV synthesis constants (relative to baseline).
+REL_AREA = {BASELINE: 1.00, SKEWED: 1.09}
+REL_POWER = {BASELINE: 1.00, SKEWED: 1.07}
+
+# Absolute anchors for reporting (per-PE, representative of a 45nm bf16 FMA
+# at 1 GHz; only *ratios* matter for the paper's claims).
+BASE_PE_POWER_MW = 1.9
+BASE_PE_AREA_UM2 = 3600.0
+
+# Two-component power split: a per-cycle component (clock tree, pipeline
+# registers, leakage — scales with *area*, burns for every cycle the array is
+# busy) and a per-MAC component (datapath switching — scales with useful work,
+# which is identical for both designs, but each skewed MAC costs the fix-logic
+# overhead). Register/clock power dominates dense SAs; 0.85/0.15 reproduces
+# the paper's measured energy within ~1 % (see EXPERIMENTS.md §Paper-claims).
+CYCLE_POWER_SHARE = 0.85
+MAC_POWER_SHARE = 1.0 - CYCLE_POWER_SHARE
+REL_MAC_ENERGY = {BASELINE: 1.00, SKEWED: 1.07}
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyReport:
+    layer: str
+    cycles_base: int
+    cycles_skew: int
+    energy_base: float  # µJ
+    energy_skew: float  # µJ
+
+    @property
+    def latency_saving(self) -> float:
+        return 1.0 - self.cycles_skew / self.cycles_base if self.cycles_base else 0.0
+
+    @property
+    def energy_saving(self) -> float:
+        return 1.0 - self.energy_skew / self.energy_base if self.energy_base else 0.0
+
+
+def array_power_w(sa: SAConfig) -> float:
+    return REL_POWER[sa.pipeline] * BASE_PE_POWER_MW * 1e-3 * sa.rows * sa.cols
+
+
+def array_area_mm2(sa: SAConfig) -> float:
+    return REL_AREA[sa.pipeline] * BASE_PE_AREA_UM2 * 1e-6 * sa.rows * sa.cols
+
+
+def layer_energy_uj(layer, sa: SAConfig, dw_mode: str = "packed") -> float:
+    """E = per-cycle power × latency + per-MAC energy × MAC count."""
+    cycles = wl.layer_latency(layer, sa, dw_mode)
+    macs = wl.layer_macs(layer, sa.rows, dw_mode)
+    p0 = BASE_PE_POWER_MW * 1e-3 * sa.rows * sa.cols        # W at full tilt
+    e_cycle = CYCLE_POWER_SHARE * p0 * REL_AREA[sa.pipeline] \
+        * cycles / (sa.freq_ghz * 1e9)
+    # per-MAC energy anchored so that a fully-utilized baseline array splits
+    # power 85/15 between the two components
+    e_per_mac = MAC_POWER_SHARE * BASE_PE_POWER_MW * 1e-3 / (sa.freq_ghz * 1e9)
+    e_mac = REL_MAC_ENERGY[sa.pipeline] * e_per_mac * macs
+    return (e_cycle + e_mac) * 1e6
+
+
+def network_report(name: str, rows: int = 128, cols: int = 128,
+                   dw_mode: str = "packed") -> list[EnergyReport]:
+    """Per-layer baseline-vs-skewed energy (the data behind Figs. 7/8)."""
+    base = SAConfig(rows, cols, pipeline=BASELINE)
+    skew = SAConfig(rows, cols, pipeline=SKEWED)
+    out = []
+    for layer in wl.WORKLOADS[name]():
+        cb = wl.layer_latency(layer, base, dw_mode)
+        cs = wl.layer_latency(layer, skew, dw_mode)
+        out.append(EnergyReport(
+            layer=layer.name, cycles_base=cb, cycles_skew=cs,
+            energy_base=layer_energy_uj(layer, base, dw_mode),
+            energy_skew=layer_energy_uj(layer, skew, dw_mode)))
+    return out
+
+
+def network_totals(name: str, rows: int = 128, cols: int = 128,
+                   dw_mode: str = "packed") -> dict:
+    reps = network_report(name, rows, cols, dw_mode)
+    cb = sum(r.cycles_base for r in reps)
+    cs = sum(r.cycles_skew for r in reps)
+    eb = sum(r.energy_base for r in reps)
+    es = sum(r.energy_skew for r in reps)
+    return {
+        "network": name, "dw_mode": dw_mode,
+        "cycles_base": cb, "cycles_skew": cs,
+        "latency_saving": 1 - cs / cb,
+        "energy_base_uj": eb, "energy_skew_uj": es,
+        "energy_saving": 1 - es / eb,
+    }

@@ -1,0 +1,183 @@
+"""Reduced-precision floating-point formats (paper Fig. 1).
+
+The paper targets Bfloat16 inputs with FP32 column reduction, and motivates the
+skewed pipeline with the FP8 formats of Micikevicius et al. (E4M3 / E5M2), whose
+mantissa fields are *narrower than* their exponent fields — the delay-profile flip
+that makes the exponent path co-critical.
+
+This module gives each format a first-class descriptor plus JAX-traceable
+encode/decode/quantize helpers used by
+
+  * ``core.chained_fma``   — the bit-exact datapath models (field extraction),
+  * ``core.precision``     — the framework-wide GEMM precision policy,
+  * ``kernels/quantize.py``— the Pallas quantization kernels.
+
+Conventions (match the paper's hardware assumptions, documented in DESIGN.md):
+  * subnormals are flushed to zero (FTZ) on encode — standard for DL accelerators,
+  * saturating overflow (no Inf) for FP8 per the E4M3 convention; E5M2 keeps Inf,
+  * round-to-nearest-even everywhere a rounding step exists (i.e. only at the
+    column end / output write-back — never inside the chained accumulation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FPFormat:
+    """A sign/exponent/mantissa floating-point format descriptor."""
+
+    name: str
+    exp_bits: int
+    man_bits: int          # stored (fraction) bits, excluding hidden bit
+    saturate: bool = False  # True => clamp to max finite instead of Inf
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.exp_bits + self.man_bits
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.exp_bits - 1)) - 1
+
+    @property
+    def emax(self) -> int:
+        # E4M3 (OCP FP8) reclaims the top exponent for finite values.
+        if self.name == "fp8_e4m3":
+            return (1 << self.exp_bits) - 1 - self.bias
+        return (1 << self.exp_bits) - 2 - self.bias
+
+    @property
+    def emin(self) -> int:
+        return 1 - self.bias
+
+    @property
+    def max_finite(self) -> float:
+        if self.name == "fp8_e4m3":
+            # 1.110 x 2^8 = 448 (mantissa 0b111 with the NaN row excluded)
+            return float((2.0 - 2.0 ** (-self.man_bits) * 2) * 2.0 ** self.emax)
+        return float((2.0 - 2.0 ** (-self.man_bits)) * 2.0 ** self.emax)
+
+    @property
+    def min_normal(self) -> float:
+        return float(2.0 ** self.emin)
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"FPFormat({self.name}: 1/{self.exp_bits}/{self.man_bits})"
+
+
+FP32 = FPFormat("fp32", exp_bits=8, man_bits=23)
+BF16 = FPFormat("bf16", exp_bits=8, man_bits=7)
+FP16 = FPFormat("fp16", exp_bits=5, man_bits=10)
+FP8_E4M3 = FPFormat("fp8_e4m3", exp_bits=4, man_bits=3, saturate=True)
+FP8_E5M2 = FPFormat("fp8_e5m2", exp_bits=5, man_bits=2)
+
+FORMATS: dict[str, FPFormat] = {
+    f.name: f for f in (FP32, BF16, FP16, FP8_E4M3, FP8_E5M2)
+}
+
+
+def get_format(name: str | FPFormat) -> FPFormat:
+    if isinstance(name, FPFormat):
+        return name
+    try:
+        return FORMATS[name]
+    except KeyError as e:
+        raise ValueError(f"unknown FP format {name!r}; have {sorted(FORMATS)}") from e
+
+
+# ---------------------------------------------------------------------------
+# Field extraction / packing (numpy + jnp, used by the bit-exact datapath)
+# ---------------------------------------------------------------------------
+
+def decompose(x, fmt: FPFormat):
+    """Split values into integer (sign, exponent, mantissa-with-hidden-bit).
+
+    Returns (s, e, m) where the represented value is
+    ``(-1)^s * m * 2^(e - bias - man_bits)`` and m includes the hidden bit
+    (m == 0 encodes zero; FTZ applied). Works on jnp or np arrays.
+    """
+    xnp = jnp if isinstance(x, jax.Array) else np
+    f32 = xnp.asarray(x, dtype=xnp.float32)
+    bits = f32.view(xnp.uint32).astype(xnp.int64) if xnp is np else \
+        jax.lax.bitcast_convert_type(f32, jnp.uint32).astype(jnp.int64)
+    s = (bits >> 31) & 0x1
+    e32 = (bits >> 23) & 0xFF
+    m32 = bits & 0x7FFFFF
+    # re-bias into the target format and truncate mantissa (no rounding here —
+    # decompose() is used on values already representable in `fmt`).
+    shift = 23 - fmt.man_bits
+    m = (m32 >> shift) | (xnp.where(e32 > 0, 1, 0) << fmt.man_bits)
+    e = e32 - 127 + fmt.bias
+    zero = (e32 == 0)  # FTZ: subnormal f32 treated as zero
+    m = xnp.where(zero, 0, m)
+    e = xnp.where(zero, 0, e)
+    return s.astype(xnp.int32), e.astype(xnp.int32), m.astype(xnp.int64)
+
+
+def compose(s, e, m, fmt: FPFormat):
+    """Inverse of :func:`decompose` — rebuild float32 from integer fields."""
+    xnp = jnp if isinstance(m, jax.Array) else np
+    s = xnp.asarray(s, dtype=xnp.int64)
+    e = xnp.asarray(e, dtype=xnp.int64)
+    m = xnp.asarray(m, dtype=xnp.int64)
+    value = m.astype(xnp.float64) * (2.0 ** (e - fmt.bias - fmt.man_bits).astype(xnp.float64))
+    value = xnp.where(m == 0, 0.0, value)
+    return (xnp.where(s == 1, -value, value)).astype(xnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Quantization (JAX-traceable; round-to-nearest-even, FTZ, saturating)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("fmt_name",))
+def _quantize_jit(x: jax.Array, fmt_name: str) -> jax.Array:
+    fmt = get_format(fmt_name)
+    if fmt.name == "fp32":
+        return x.astype(jnp.float32)
+    if fmt.name in ("bf16", "fp16"):
+        dt = jnp.bfloat16 if fmt.name == "bf16" else jnp.float16
+        y = x.astype(dt).astype(jnp.float32)
+        # FTZ: the IEEE cast keeps subnormals, the SA datapath does not
+        return jnp.where(jnp.abs(y) < fmt.min_normal, 0.0, y)
+    # Generic path (FP8): round f32 to `man_bits` mantissa bits (RNE) by masking
+    # in the integer domain, then clamp exponent range with FTZ + saturation.
+    f32 = x.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(f32, jnp.uint32)
+    shift = 23 - fmt.man_bits
+    half = jnp.uint32(1 << (shift - 1))
+    lsb = (bits >> shift) & 1
+    rounded = bits + half - 1 + lsb  # RNE on the mantissa field
+    rounded = rounded & ~jnp.uint32((1 << shift) - 1)
+    y = jax.lax.bitcast_convert_type(rounded, jnp.float32)
+    # clamp: FTZ below min_normal, saturate/inf above max_finite
+    ay = jnp.abs(y)
+    y = jnp.where(ay < fmt.min_normal, 0.0, y)
+    if fmt.saturate:
+        y = jnp.clip(y, -fmt.max_finite, fmt.max_finite)
+    else:
+        y = jnp.where(ay > fmt.max_finite, jnp.sign(y) * jnp.inf, y)
+    return jnp.where(jnp.isnan(f32), f32, y)
+
+
+def quantize(x, fmt: str | FPFormat) -> jax.Array:
+    """Quantize to the target reduced-precision format, returned as float32."""
+    return _quantize_jit(jnp.asarray(x), get_format(fmt).name)
+
+
+def quantize_np(x: np.ndarray, fmt: str | FPFormat) -> np.ndarray:
+    """Numpy twin of :func:`quantize` (used by pure-numpy oracles)."""
+    return np.array(quantize(jnp.asarray(np.asarray(x, np.float32)), fmt))
+
+
+def representable(rng: np.random.Generator, shape, fmt: str | FPFormat,
+                  scale: float = 1.0) -> np.ndarray:
+    """Random values exactly representable in `fmt` (for bit-exact tests)."""
+    f = get_format(fmt)
+    x = rng.standard_normal(shape).astype(np.float32) * scale
+    return quantize_np(x, f)

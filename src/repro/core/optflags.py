@@ -1,0 +1,51 @@
+"""Beyond-paper performance optimizations (EXPERIMENTS.md §Perf).
+
+Each flag gates one hillclimb change so baseline/optimized lowerings can be
+A/B'd from the same tree. `REPRO_OPT=0` disables all.
+
+  pad_kv_heads        — pad KV heads (and the grouped Q heads) up to the TP
+                        axis size when KVH doesn't divide it. Without this
+                        the SPMD partitioner REPLICATES all attention einsums
+                        across the model axis (observed: 16× attention FLOPs
+                        on phi3 40H/10KVH, full KV-cache reshard per decode
+                        step on gemma). Padding costs ≤2× score FLOPs but
+                        shards 16×.
+  bf16_params_in_layers — cast layer params to bf16 at superblock entry, so
+                        FSDP all-gathers move bf16, not fp32 (2× ICI saving
+                        on llama4-maverick). Numerically identical: sa_dot
+                        quantizes to bf16 at every use anyway.
+  pallas_attention    — route forward-only attention (serving prefill) through
+                        the Pallas flash kernel (kernels/sa_attention.py):
+                        softmax state stays in VMEM instead of materializing
+                        probability tiles in HBM. Default on for TPU only
+                        (interpret mode on CPU is correctness-grade, not
+                        speed-grade); training keeps the custom-VJP jnp path.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+_ENABLED = os.environ.get("REPRO_OPT", "1") not in ("0", "false", "off")
+
+FLAGS = {
+    "pad_kv_heads": _ENABLED,
+    "bf16_params_in_layers": _ENABLED,
+    "pallas_attention": _ENABLED and jax.default_backend() == "tpu",
+    # REFUTED (kept for the record, default off): padding the expert dim at
+    # trace time (granite 40→48) forces a per-layer-per-µstep reshard of the
+    # F-sharded stored weights into the E-sharded compute layout — measured
+    # +104 % collectives (10.9 s→22.3 s) instead of the predicted win. The
+    # correct version stores params E-padded (checkpoint-shape change);
+    # documented in EXPERIMENTS.md §Perf.
+    "pad_experts": False,
+}
+
+
+def enabled(name: str) -> bool:
+    return FLAGS.get(name, False)
+
+
+def set_flag(name: str, value: bool):
+    FLAGS[name] = value

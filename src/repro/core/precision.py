@@ -1,0 +1,149 @@
+"""The paper's arithmetic contract as the framework-wide GEMM entry point.
+
+Every matrix multiplication in this framework goes through :func:`sa_dot`,
+which enforces the systolic-array datapath semantics of the paper (§II):
+
+  * inputs quantized to a reduced-precision format (Bfloat16 / FP8),
+  * products chained-accumulated in double width (FP32) with **no
+    intermediate normalization/rounding**,
+  * one rounding at the end of the reduction ("south end of the column").
+
+Backends:
+  * ``xla``     — `lax.dot_general` with `preferred_element_type=float32`.
+                  On TPU this lowers straight onto the MXU, whose hardware
+                  accumulate implements exactly the above contract.
+  * ``pallas``  — our tiled Pallas kernel (`repro.kernels.ops.sa_matmul`):
+                  explicit K-loop with a persistent unnormalized fp32 VMEM
+                  accumulator — the software restatement of the skewed
+                  column (see DESIGN.md §2b).
+  * ``emulate`` — the bit-exact integer-field datapath of
+                  :mod:`repro.core.chained_fma` (tiny shapes; validation).
+
+The policy also selects the *output* rounding target, mirroring where the
+paper's single rounder sits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fpformats import get_format, quantize
+
+_JNP_INPUT_DTYPE = {
+    "fp32": jnp.float32,
+    "bf16": jnp.bfloat16,
+    "fp16": jnp.float16,
+    # FP8 storage dtypes exist in jnp; CPU backends may not support matmul on
+    # them, so the fp8 paths quantize values but carry them in bf16 containers
+    # ("fake quant", numerically faithful to Fig. 1's formats).
+    "fp8_e4m3": jnp.bfloat16,
+    "fp8_e5m2": jnp.bfloat16,
+}
+
+# The XLA *CPU* runtime cannot execute batched bf16×bf16→f32 dots. Since every
+# reduced-format value is exactly representable in f32 and products of ≤12-bit
+# significands are exact in f32, carrying quantized values in f32 containers
+# is BIT-IDENTICAL to the bf16 MXU contract — so CPU execution flips this flag
+# on. The dry-run (lower/compile only, never executes) flips it off to lower
+# the TPU-true bf16 program so cost_analysis sees real bf16 byte counts.
+EXACT_CPU_CONTAINERS = jax.default_backend() != "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """What the SA does to a GEMM: formats + backend."""
+
+    input_format: str = "bf16"       # paper's evaluated configuration
+    accum_format: str = "fp32"       # "double-width reduction"
+    output_format: str = "fp32"      # rounding target at the column end
+    backend: str = "xla"             # xla | pallas | emulate
+
+    def __post_init__(self):
+        get_format(self.input_format)
+        if self.accum_format != "fp32":
+            raise ValueError("the SA reduces in FP32 (paper §II)")
+        if self.backend not in ("xla", "pallas", "emulate"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+
+    def cast_in(self, x: jax.Array) -> jax.Array:
+        fmt = get_format(self.input_format)
+        if fmt.name == "fp32":
+            return x.astype(jnp.float32)
+        if fmt.name in ("bf16", "fp16"):
+            q = x.astype(_JNP_INPUT_DTYPE[fmt.name])
+            return q.astype(jnp.float32) if EXACT_CPU_CONTAINERS else q
+        # fp8: quantize values to the format's grid, carry in bf16 (exact
+        # container: bf16 has 8 exponent / 7 mantissa bits ≥ any FP8 format).
+        q = quantize(x, fmt)
+        return q if EXACT_CPU_CONTAINERS else q.astype(jnp.bfloat16)
+
+    def cast_out(self, y: jax.Array) -> jax.Array:
+        fmt = get_format(self.output_format)
+        if fmt.name == "fp32":
+            return y.astype(jnp.float32)
+        return quantize(y, fmt)
+
+
+DEFAULT_POLICY = PrecisionPolicy()
+_POLICY_STACK: list[PrecisionPolicy] = [DEFAULT_POLICY]
+
+
+def current_policy() -> PrecisionPolicy:
+    return _POLICY_STACK[-1]
+
+
+class use_policy:
+    """Context manager scoping the active precision policy (trace-time)."""
+
+    def __init__(self, policy: PrecisionPolicy):
+        self.policy = policy
+
+    def __enter__(self):
+        _POLICY_STACK.append(self.policy)
+        return self.policy
+
+    def __exit__(self, *exc):
+        _POLICY_STACK.pop()
+
+
+def _emulated_dot(a: jax.Array, w: jax.Array, policy: PrecisionPolicy):
+    from .chained_fma import matmul_emulated  # bit-exact numpy model
+
+    def cb(a_, w_):
+        return matmul_emulated(np.asarray(a_), np.asarray(w_),
+                               get_format(policy.input_format), "skewed")
+
+    out_shape = jax.ShapeDtypeStruct((a.shape[0], w.shape[1]), jnp.float32)
+    return jax.pure_callback(cb, out_shape, a.astype(jnp.float32),
+                             w.astype(jnp.float32))
+
+
+def sa_dot(a: jax.Array, w: jax.Array, policy: PrecisionPolicy | None = None,
+           precision=None) -> jax.Array:
+    """`a @ w` under the SA arithmetic contract. Batched `a` supported."""
+    policy = policy or current_policy()
+    a_q, w_q = policy.cast_in(a), policy.cast_in(w)
+    if policy.backend == "emulate":
+        if a.ndim != 2 or w.ndim != 2:
+            raise ValueError("emulate backend supports 2-D GEMMs only")
+        return policy.cast_out(_emulated_dot(a_q, w_q, policy))
+    if policy.backend == "pallas" and a.ndim == 2 and w.ndim == 2:
+        from repro.kernels.ops import sa_matmul  # lazy: avoid import cycle
+
+        return policy.cast_out(sa_matmul(a_q, w_q))
+    # xla / fallback: MXU dot with fp32 accumulation, round once on output.
+    y = jnp.matmul(a_q, w_q, preferred_element_type=jnp.float32)
+    return policy.cast_out(y)
+
+
+def sa_einsum(spec: str, a: jax.Array, w: jax.Array,
+              policy: PrecisionPolicy | None = None) -> jax.Array:
+    """Einsum under the SA contract (attention/MoE paths)."""
+    policy = policy or current_policy()
+    a_q, w_q = policy.cast_in(a), policy.cast_in(w)
+    y = jnp.einsum(spec, a_q, w_q, preferred_element_type=jnp.float32)
+    return policy.cast_out(y)

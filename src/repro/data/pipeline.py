@@ -1,0 +1,119 @@
+"""Data pipeline: host-sharded token streams with background prefetch.
+
+Two sources:
+  * `SyntheticLM` — deterministic per-(step, host) seeded token batches;
+    used by the examples, benchmarks and the multi-pod dry-run (no dataset
+    gate: repro band expects a laptop-scale pure-algorithm build).
+  * `MemmapTokens` — flat binary token file (np.memmap), strided across
+    hosts; the production path for real corpora.
+
+Both yield global-batch-per-host slices: on a real multi-host pod each
+process feeds its addressable shard (`jax.process_index()`); the elastic
+restart path re-slices by the *current* host count, so a shrunk/grown job
+keeps a consistent global batch (fault tolerance, DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import jax
+import numpy as np
+
+
+class SyntheticLM:
+    """Deterministic synthetic next-token data (shifted-sequence labels)."""
+
+    def __init__(self, vocab_size: int, seq_len: int, batch_per_host: int,
+                 seed: int = 0, structured: bool = False):
+        self.vocab = vocab_size
+        self.seq = seq_len
+        self.batch = batch_per_host
+        self.seed = seed
+        self.structured = structured
+
+    def batch_at(self, step: int, host: int = 0) -> dict:
+        rng = np.random.default_rng(
+            (self.seed * 1_000_003 + step) * 4099 + host)
+        if self.structured:
+            # learnable sequences: t_{i+1} = (t_i + stride) mod V with a
+            # small stride alphabet — loss visibly drops below log(V)
+            start = rng.integers(0, self.vocab, (self.batch, 1))
+            stride = rng.choice([1, 2, 3, 5, 7], (self.batch, 1))
+            idx = np.arange(self.seq + 1)[None]
+            toks = ((start + stride * idx) % self.vocab).astype(np.int32)
+        else:
+            toks = rng.integers(0, self.vocab,
+                                size=(self.batch, self.seq + 1),
+                                dtype=np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def __iter__(self) -> Iterator[dict]:
+        host = jax.process_index()
+        step = 0
+        while True:
+            yield self.batch_at(step, host)
+            step += 1
+
+
+class MemmapTokens:
+    """Flat int32 token file; contiguous windows strided over hosts."""
+
+    def __init__(self, path: str, seq_len: int, batch_per_host: int,
+                 n_hosts: int | None = None, host: int | None = None):
+        self.data = np.memmap(path, dtype=np.int32, mode="r")
+        self.seq = seq_len
+        self.batch = batch_per_host
+        self.n_hosts = n_hosts if n_hosts is not None else jax.process_count()
+        self.host = host if host is not None else jax.process_index()
+        self.n_windows = (len(self.data) - 1) // seq_len
+
+    def batch_at(self, step: int) -> dict:
+        idx = (step * self.n_hosts + self.host) * self.batch
+        rows = [(idx + i) % self.n_windows for i in range(self.batch)]
+        toks = np.stack([self.data[r * self.seq:(r + 1) * self.seq + 1]
+                         for r in rows]).astype(np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class Prefetcher:
+    """Background-thread prefetch: overlaps host data prep with device step."""
+
+    def __init__(self, it: Iterator[dict], depth: int = 2):
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self.it = it
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._run, daemon=True)
+        self.thread.start()
+
+    def _run(self):
+        try:
+            for item in self.it:
+                if self._stop.is_set():
+                    return
+                self.q.put(item)
+        finally:
+            self.q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()
+        try:
+            self.q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,168 @@
+"""Pallas kernel running the paper's skewed exponent datapath bit-exactly.
+
+Where `sa_matmul.py` maps the paper's *insight* onto the MXU, this kernel
+executes the paper's *exact integer datapath* (§III.B, Figs. 5/6) — the
+speculative exponent forward ``ê_i = max(e_Mi, ê_{i-1})``, the one-stage-late
+LZA forward ``L_{i-1}``, the fix ``d = d' ± L_{i-1}``, and the retimed
+normalize∥align net shift — tile-parallel over the output matrix, with the
+K loop playing the column of PEs.
+
+It is the on-device twin of :mod:`repro.core.chained_fma` (the numpy model is
+the oracle in `tests/test_kernels.py`), and is used to bit-audit the MXU
+path: for inputs where no alignment truncation occurs the two agree exactly.
+
+All state is int32: the accumulator register is GUARD+24 = 27 bits
+(msb ≤ P+1 = 27 < 31), exponents are small integers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.chained_fma import ACC_MSB, GUARD
+from repro.core.fpformats import get_format
+
+_Q = ACC_MSB + 1
+E_ZERO = -100000  # python int: folded into the kernel, not captured
+
+
+def _msb(x):
+    """floor(log2(x)) for int32 x > 0 (exact clz-style binary search)."""
+    m = jnp.zeros_like(x)
+    for shift in (16, 8, 4, 2, 1):
+        hi = x >> shift
+        gt = hi > 0
+        x = jnp.where(gt, hi, x)
+        m = m + jnp.where(gt, shift, 0)
+    return m
+
+
+def _shr(x, n):
+    return x >> jnp.clip(n, 0, 31)
+
+
+def _shl(x, n):
+    return x << jnp.clip(n, 0, 31)
+
+
+def _net_shift(x, left):
+    """The retimed bidirectional normalize∥align shifter of Fig. 6."""
+    return jnp.where(left >= 0, _shl(x, left), _shr(x, -left))
+
+
+def _fields(xf32, man_bits: int):
+    """Extract (s, e_unbiased, mantissa-with-hidden) — values must already be
+    representable in the reduced format (truncation is then exact)."""
+    bits = lax.bitcast_convert_type(xf32, jnp.uint32)
+    s = (bits >> 31).astype(jnp.int32)
+    e32 = ((bits >> 23) & 0xFF).astype(jnp.int32)
+    frac = ((bits >> (23 - man_bits)) & ((1 << man_bits) - 1)).astype(jnp.int32)
+    m = jnp.where(e32 > 0, frac | (1 << man_bits), 0)
+    e = jnp.where(m == 0, E_ZERO, e32 - 127)
+    return s, e, m
+
+
+def _fma_emu_kernel(a_ref, w_ref, o_ref, *, n_k: int, man_bits: int):
+    a_blk = a_ref[...]        # (bm, K) f32 values on the reduced grid
+    w_blk = w_ref[...]        # (K, bn)
+    bm, bn = o_ref.shape
+
+    def pe_step(k, carry):
+        s_p, ehat, S, L = carry
+        av = lax.dynamic_slice_in_dim(a_blk, k, 1, axis=1)      # (bm, 1)
+        wv = lax.dynamic_slice_in_dim(w_blk, k, 1, axis=0)      # (1, bn)
+        sa, ea, ma = _fields(av, man_bits)
+        sb, eb, mb = _fields(wv, man_bits)
+        # --- stage 1: multiplier (exact in the wide register) -------------
+        mm = ma * mb                                            # (bm, bn)
+        pm_msb = _msb(jnp.maximum(mm, 1))
+        e_m = ea + eb - 2 * man_bits + pm_msb
+        m_m = _shl(mm, ACC_MSB - pm_msb)
+        s_m = sa ^ sb
+        e_m = jnp.where(mm == 0, E_ZERO, e_m)
+        # --- stage 1: speculative exponent compute (uses ê, not e) --------
+        ge = e_m >= ehat
+        d_spec = jnp.abs(e_m - ehat)
+        # --- stage 2: fix with the forwarded L of the previous PE ---------
+        d_fix = jnp.where(ge, d_spec + L, L - d_spec)
+        prod_dom = d_fix > 0
+        zero_prev = S == 0
+        e_max = jnp.where(prod_dom, e_m, ehat - L)
+        e_max = jnp.where(zero_prev, e_m, e_max)
+        # retimed normalize ∥ align: one net shift of the incoming sum
+        acc_net_left = (L - 1) - jnp.maximum(d_fix, 0)
+        Sa = jnp.where(zero_prev, 0, _net_shift(S, acc_net_left))
+        mp = jnp.where(e_m == E_ZERO, 0, _shr(m_m, jnp.maximum(-d_fix, 0)))
+        # --- adder + LZA ---------------------------------------------------
+        v = jnp.where(s_m == 1, -mp, mp) + jnp.where(s_p == 1, -Sa, Sa)
+        s_o = (v < 0).astype(jnp.int32)
+        S_o = jnp.abs(v)
+        L_o = _Q - _msb(jnp.maximum(S_o, 1))
+        z = S_o == 0
+        return (jnp.where(z, 0, s_o),
+                jnp.where(z, E_ZERO, e_max + 1),
+                S_o,
+                jnp.where(z, 0, L_o))
+
+    init = (jnp.zeros((bm, bn), jnp.int32),
+            jnp.full((bm, bn), E_ZERO, jnp.int32),
+            jnp.zeros((bm, bn), jnp.int32),
+            jnp.zeros((bm, bn), jnp.int32))
+    s, ehat, S, L = lax.fori_loop(0, n_k, pe_step, init)
+
+    # column-end: deferred final normalization + the single rounding stage
+    Ln = _Q - _msb(jnp.maximum(S, 1))
+    e = ehat - Ln
+    m = _net_shift(S, Ln - 1)
+    low = m & ((1 << GUARD) - 1)
+    keep = m >> GUARD
+    half = 1 << (GUARD - 1)
+    up = (low > half) | ((low == half) & ((keep & 1) == 1))
+    keep = keep + up.astype(jnp.int32)
+    ovf = (keep >> 24) != 0
+    keep = jnp.where(ovf, keep >> 1, keep)
+    e = e + ovf.astype(jnp.int32)
+    # bit-exact f32 construction (exp2/mul would round): keep has its hidden
+    # bit at 23, e is the unbiased exponent. FTZ below the normal range,
+    # saturate to Inf above it (documented output contract).
+    e32 = e + 127
+    frac = (keep & 0x7FFFFF).astype(jnp.uint32)
+    bits = (s.astype(jnp.uint32) << 31) \
+        | (jnp.clip(e32, 0, 255).astype(jnp.uint32) << 23) | frac
+    bits = jnp.where(e32 >= 255,
+                     (s.astype(jnp.uint32) << 31) | jnp.uint32(0x7F800000),
+                     bits)
+    zero = (S == 0) | (e32 <= 0)
+    bits = jnp.where(zero, s.astype(jnp.uint32) << 31, bits)
+    o_ref[...] = lax.bitcast_convert_type(bits, jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fmt_name", "bm", "bn", "interpret"))
+def fma_emu_matmul(a: jax.Array, w: jax.Array, fmt_name: str = "bf16", *,
+                   bm: int = 64, bn: int = 64, interpret: bool = True):
+    """(M,K)@(K,N) through the bit-exact skewed datapath, tile-parallel.
+
+    K is kept resident per block (this kernel demonstrates the PE chain; it
+    is not the production GEMM path — that is `sa_matmul`).
+    """
+    fmt = get_format(fmt_name)
+    m, k = a.shape
+    _, n = w.shape
+    bm, bn = min(bm, m), min(bn, n)
+    kernel = pl.pallas_call(
+        functools.partial(_fma_emu_kernel, n_k=k, man_bits=fmt.man_bits),
+        grid=(pl.cdiv(m, bm), pl.cdiv(n, bn)),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )
+    return kernel(a.astype(jnp.float32), w.astype(jnp.float32))

@@ -1,0 +1,51 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode; on TPU they
+compile to Mosaic. `INTERPRET` is resolved once from the backend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .sa_matmul import sa_matmul_pallas
+from .fp_emu import fma_emu_matmul
+from .quantize import quantize_fp8, amax_scale
+from .sa_attention import sa_attention as _sa_attention
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def sa_attention(q, k, v, **kw):
+    """Flash attention kernel (VMEM-resident softmax state; see
+    sa_attention.py). Forward-only; GQA/causal/window/softcap."""
+    kw.setdefault("interpret", INTERPRET)
+    return _sa_attention(q, k, v, **kw)
+
+
+def sa_matmul(a: jax.Array, w: jax.Array, *, bm: int = 256, bn: int = 256,
+              bk: int = 512, out_dtype=jnp.float32) -> jax.Array:
+    """Production GEMM under the SA contract (see sa_matmul.py)."""
+    return sa_matmul_pallas(a, w, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+                            interpret=INTERPRET)
+
+
+def sa_matmul_fp8(a: jax.Array, w: jax.Array, fmt_name: str = "fp8_e4m3",
+                  **kw) -> jax.Array:
+    """FP8 GEMM: per-tensor-scaled quantization kernels feeding the SA GEMM,
+    descaled on output (round-once preserved end-to-end)."""
+    sa_, sw = amax_scale(a, fmt_name), amax_scale(w, fmt_name)
+    aq = quantize_fp8(a, sa_, fmt_name, interpret=INTERPRET).astype(jnp.bfloat16)
+    wq = quantize_fp8(w, sw, fmt_name, interpret=INTERPRET).astype(jnp.bfloat16)
+    y = sa_matmul(aq, wq, **kw)
+    return y * (sa_ * sw)
+
+
+def skewed_datapath_matmul(a: jax.Array, w: jax.Array,
+                           fmt_name: str = "bf16") -> jax.Array:
+    """Bit-exact skewed-pipeline GEMM (validation path; see fp_emu.py)."""
+    return fma_emu_matmul(a, w, fmt_name, interpret=True)
+
+
+__all__ = ["sa_matmul", "sa_matmul_fp8", "skewed_datapath_matmul",
+           "sa_attention", "quantize_fp8", "amax_scale", "INTERPRET"]

@@ -1,0 +1,72 @@
+"""Pallas kernel: scaled FP8 quantization (the SA's input formatting stage).
+
+Quantizes f32/bf16 tensors onto an FP8 grid (E4M3/E5M2, Fig. 1) with a
+per-tensor scale: ``y = rne(x / scale)`` with FTZ + saturation. In the fp8
+GEMM path this runs in the tile prologue, so the "exponent work" (scale +
+format handling) of tile k+1 overlaps the MXU work of tile k — the software
+analogue of the paper's speculative exponent forwarding (DESIGN.md §2b).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.fpformats import get_format
+
+
+def _quant_body(x, *, man_bits: int, min_normal: float, max_finite: float,
+                saturate: bool):
+    bits = lax.bitcast_convert_type(x, jnp.uint32)
+    shift = 23 - man_bits
+    half = jnp.uint32(1 << (shift - 1))
+    lsb = (bits >> shift) & 1
+    rounded = (bits + half - 1 + lsb) & ~jnp.uint32((1 << shift) - 1)
+    y = lax.bitcast_convert_type(rounded, jnp.float32)
+    ay = jnp.abs(y)
+    y = jnp.where(ay < min_normal, 0.0, y)                     # FTZ
+    if saturate:
+        y = jnp.clip(y, -max_finite, max_finite)
+    else:
+        y = jnp.where(ay > max_finite, jnp.sign(y) * jnp.inf, y)
+    return jnp.where(jnp.isnan(x), x, y)
+
+
+def _quantize_kernel(x_ref, scale_ref, o_ref, **params):
+    inv = 1.0 / scale_ref[0]
+    o_ref[...] = _quant_body(x_ref[...] * inv, **params)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_name", "block", "interpret"))
+def quantize_fp8(x: jax.Array, scale: jax.Array, fmt_name: str = "fp8_e4m3",
+                 *, block: int = 512, interpret: bool = False) -> jax.Array:
+    """Quantize `x/scale` onto the fp8 grid; returns f32 grid values."""
+    fmt = get_format(fmt_name)
+    orig_shape = x.shape
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    bl = min(block, n)
+    params = dict(man_bits=fmt.man_bits, min_normal=fmt.min_normal,
+                  max_finite=fmt.max_finite, saturate=fmt.saturate)
+    out = pl.pallas_call(
+        functools.partial(_quantize_kernel, **params),
+        grid=(pl.cdiv(n, bl),),
+        in_specs=[
+            pl.BlockSpec((bl,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pl.ANY),   # scalar scale, unblocked
+        ],
+        out_specs=pl.BlockSpec((bl,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(flat, jnp.asarray(scale, jnp.float32).reshape(1))
+    return out.reshape(orig_shape)
+
+
+def amax_scale(x: jax.Array, fmt_name: str = "fp8_e4m3") -> jax.Array:
+    """Per-tensor scale mapping amax onto the format's max finite value."""
+    fmt = get_format(fmt_name)
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    return jnp.maximum(amax / fmt.max_finite, 1e-12)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels (no pallas imports)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fpformats import get_format
+
+
+def sa_matmul_ref(a: jax.Array, w: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    """The SA arithmetic contract in plain jnp: products accumulated in fp32,
+    rounded once on write-out."""
+    y = jnp.matmul(a, w, preferred_element_type=jnp.float32)
+    return y.astype(out_dtype)
+
+
+def quantize_ref(x: jax.Array, fmt_name: str, scale: jax.Array | float = 1.0
+                 ) -> jax.Array:
+    """Scaled quantization oracle: round(x/scale) onto the format grid (RNE,
+    FTZ, saturating per format), returned as f32 values on the grid."""
+    from repro.core.fpformats import quantize
+
+    return quantize(jnp.asarray(x, jnp.float32) / scale, get_format(fmt_name))
+
+
+def chained_fma_ref(a: np.ndarray, w: np.ndarray, fmt_name: str = "bf16",
+                    pipeline: str = "skewed") -> np.ndarray:
+    """Bit-exact oracle for the fp_emu kernel: the numpy datapath model."""
+    from repro.core.chained_fma import matmul_emulated
+
+    return matmul_emulated(a, w, get_format(fmt_name), pipeline)

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: the SA column's arithmetic contract as an MXU GEMM.
+
+TPU-native restatement of the paper's skewed pipeline (DESIGN.md §2b):
+
+  * the K-grid dimension is the **column of PEs** — each step fuses one
+    (bm×bk)·(bk×bn) product into the running block result;
+  * the accumulator lives **unnormalized in fp32 VMEM scratch across all K
+    steps** — the chain is never rounded/materialized between steps (the
+    paper's "no per-PE normalization, double-width reduction");
+  * the Pallas grid pipelines the *next* K-tile's HBM→VMEM DMA under the
+    *current* tile's MXU work — the software analogue of the skew's
+    stage-overlap between consecutive PEs;
+  * rounding to the output format happens exactly once, in the final K step
+    (the paper's single rounder at the column south end).
+
+Block shapes default to MXU-aligned (multiples of 128 in M/N, 512 in K) and
+are swept by `benchmarks/kernel_bench.py`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, w_ref, o_ref, acc_ref, *, n_k: int, out_dtype):
+    """One (i, j, k) grid step: psum_k = psum_{k-1} + A_ik · W_kj."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # The chained multiply-add: MXU product accumulated into the persistent
+    # fp32 scratch (never normalized/rounded mid-chain).
+    acc_ref[...] += jnp.dot(a_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _round_once():
+        # single rounding at the end of the K chain (column south end)
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "out_dtype", "interpret"))
+def sa_matmul_pallas(a: jax.Array, w: jax.Array, *, bm: int = 256,
+                     bn: int = 256, bk: int = 512,
+                     out_dtype=jnp.float32, interpret: bool = False):
+    """(M, K) @ (K, N) with SA-contract arithmetic. Inputs bf16 (or fp8
+    values carried in bf16); output rounded once to `out_dtype`."""
+    m, k = a.shape
+    k2, n = w.shape
+    assert k == k2, (a.shape, w.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    # pad to block multiples (zero products are exact under the contract)
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        w = jnp.pad(w, ((0, pk), (0, pn)))
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+
+    kernel = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2], out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + pm, n + pn), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )
+    out = kernel(a, w)
+    return out[:m, :n] if (pm or pn) else out

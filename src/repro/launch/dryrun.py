@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces (artifacts/dryrun/<arch>__<shape>__<mesh>.json):
+  * compile success + wall time,
+  * memory_analysis (per-device argument/output/temp/peak bytes — proves fit),
+  * cost_analysis   (HLO FLOPs / bytes accessed — roofline numerator),
+  * per-class collective payload bytes parsed from the optimized HLO
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute) — the collective roofline term.
+
+Meshes: `pod` = (16, 16) single pod (roofline baseline),
+        `multipod` = (2, 16, 16) 512 chips (proves the pod axis shards).
+
+Usage:
+    python -m repro.launch.dryrun --all [--resume]
+    python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k --mesh pod
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import REGISTRY, get_config
+from repro.models.config import SHAPES, SHAPES_BY_NAME
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as SP
+from repro.core import precision
+
+ART_DIR = os.environ.get(
+    "REPRO_DRYRUN_DIR",
+    os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                 "artifacts", "dryrun"))
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _tensor_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-class payload bytes: max tensor in each collective op line
+    (≈ ring payload per device for gather/reduce family)."""
+    out: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done" in line.split("=")[-1][:40]:
+            continue
+        op = m.group(1)
+        sizes = [_tensor_bytes(d, s) for d, s in _SHAPE_RE.findall(line)]
+        if not sizes:
+            continue
+        out[op] = out.get(op, 0) + max(sizes)
+        count[op] = count.get(op, 0) + 1
+    out["total"] = sum(v for k, v in out.items())
+    out["counts"] = count
+    return out
+
+
+def memory_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    d = {k: int(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+    if "argument_size_in_bytes" in d and "temp_size_in_bytes" in d:
+        d["peak_estimate_bytes"] = d["argument_size_in_bytes"] \
+            + d["output_size_in_bytes"] + d["temp_size_in_bytes"]
+    return d
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             keep_text: bool = False, accum: int | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, why = SP.cell_is_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "family": cfg.family, "params": cfg.param_count()}
+    if not ok:
+        rec |= {"status": "skipped", "reason": why}
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    t0 = time.time()
+    try:
+        from repro.parallel.sharding import set_active_mesh
+        set_active_mesh(mesh)   # activation constraints inside model code
+        step_fn, args, in_sh, out_sh = SP.input_specs(cfg, shape, mesh,
+                                                      accum=accum)
+        # donation mirrors production: train donates the state, serving
+        # donates the KV/SSM cache (in-place update on device)
+        donate = (0,) if shape.kind == "train" else (2,)
+        with mesh:
+            jitted = jax.jit(step_fn, in_shardings=in_sh,
+                             out_shardings=out_sh, donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        cost = dict(compiled.cost_analysis() or {})
+        cost = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float))}
+        text = compiled.as_text()
+        # trip-count-aware analysis: XLA's cost_analysis counts while (scan)
+        # bodies once; HLOCost multiplies by parsed trip counts (see
+        # launch/hlo_cost.py) — this is the roofline numerator.
+        from repro.launch.hlo_cost import HLOCost
+        hc = HLOCost(text).summary()
+        rec |= {
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "n_devices": int(mesh.devices.size),
+            "memory": memory_dict(compiled),
+            "xla_cost_flops": cost.get("flops", 0.0),
+            "xla_cost_bytes": cost.get("bytes accessed", 0.0),
+            "flops": hc["flops"],
+            "bytes_accessed": hc["bytes"],
+            "collectives": {"total": hc["collective_bytes"],
+                            **hc["collectives_by_class"],
+                            "legacy_line_parse": collective_bytes(text)},
+            "hlo_chars": len(text),
+        }
+        if keep_text:
+            rec["hlo_text"] = text
+    except Exception as e:  # a failing cell is a bug: record it loudly
+        rec |= {"status": "error", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-4000:]}
+    return rec
+
+
+def cell_path(arch: str, shape: str, mesh: str) -> str:
+    os.makedirs(ART_DIR, exist_ok=True)
+    return os.path.join(ART_DIR, f"{arch}__{shape}__{mesh}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=(None, "pod", "multipod"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells whose artifact already exists")
+    ap.add_argument("--accum", type=int, default=None,
+                    help="override gradient-accumulation microsteps")
+    args = ap.parse_args()
+
+    # lower the TPU-true program (bf16 containers), not the CPU-exec variant
+    precision.EXACT_CPU_CONTAINERS = False
+
+    archs = [args.arch] if args.arch else list(REGISTRY)
+    shapes = [args.shape] if args.shape else [s.name for s in SHAPES]
+    meshes = [args.mesh] if args.mesh else ["pod", "multipod"]
+    n_bad = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                path = cell_path(arch, shape, mesh_kind)
+                if args.resume and os.path.exists(path):
+                    with open(path) as f:
+                        old = json.load(f)
+                    if old.get("status") in ("ok", "skipped"):
+                        continue
+                rec = run_cell(arch, shape, mesh_kind, accum=args.accum)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    mem = rec["memory"].get("peak_estimate_bytes", 0) / 2**30
+                    extra = f"compile={rec['compile_s']:.1f}s " \
+                            f"peak/dev={mem:.2f}GiB " \
+                            f"coll={rec['collectives']['total']/2**20:.1f}MiB"
+                elif status == "error":
+                    n_bad += 1
+                    extra = rec["error"][:120]
+                print(f"[{status:7s}] {arch:28s} {shape:12s} {mesh_kind:9s} "
+                      f"{extra}", flush=True)
+    raise SystemExit(1 if n_bad else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Production mesh definitions (functions — importing never touches jax
+device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Dev mesh over whatever devices exist (CPU smoke / small runs)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0, (n, model_parallel)
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

@@ -1,0 +1,116 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+`input_specs(cfg, shape)` returns weak-type-correct abstract inputs for the
+step function the cell lowers (`train_step` / `prefill` / `serve_step`), and
+`cell_shardings(...)` the matching NamedSharding pytrees — no allocation
+anywhere (the dry-run contract).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig, ShapeCfg
+from repro.models import model as M
+from repro.parallel import sharding as S
+from repro.train.optimizer import AdamW, warmup_cosine
+from repro.train.step import make_train_step, make_prefill_step, make_serve_step
+from repro.train.train_state import abstract_state
+
+
+def default_optimizer(total_steps: int = 100_000) -> AdamW:
+    return AdamW(schedule=warmup_cosine(3e-4, 2000, total_steps))
+
+
+def accum_steps_for(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh) -> int:
+    """Microbatch count: target ≈2 sequences per DP group per microstep."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = 1
+    for a in S.batch_axes(mesh):
+        dp *= sizes[a]
+    per_dp = max(1, shape.global_batch // dp)
+    return max(1, per_dp // 2)
+
+
+def _frontend_spec(cfg: ArchConfig, batch: int):
+    if cfg.family == "vlm":
+        return jax.ShapeDtypeStruct((batch, cfg.frontend_tokens, cfg.d_model),
+                                    jnp.float32)
+    if cfg.is_encdec:
+        return jax.ShapeDtypeStruct((batch, cfg.frontend_tokens, cfg.d_model),
+                                    jnp.float32)
+    return None
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh,
+                accum: int | None = None):
+    """→ (step_fn, abstract_args: tuple, in_shardings, out_shardings)."""
+    GB, T = shape.global_batch, shape.seq_len
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        opt = default_optimizer()
+        accum = accum or accum_steps_for(cfg, shape, mesh)
+        step_fn = make_train_step(cfg, opt, accum_steps=accum)
+        state = abstract_state(cfg, opt)
+        batch = {"tokens": jax.ShapeDtypeStruct((GB, T), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((GB, T), jnp.int32)}
+        fe = _frontend_spec(cfg, GB)
+        if fe is not None:
+            batch["frontend"] = fe
+        pshard = S.param_shardings(cfg, state.params, mesh)
+        state_shard = type(state)(step=repl, params=pshard,
+                                  opt_state=type(state.opt_state)(
+                                      count=repl, mu=pshard, nu=pshard))
+        dshard = {k: NamedSharding(mesh, S.data_specs(mesh, v.shape))
+                  for k, v in batch.items()}
+        metrics_shard = {k: repl for k in
+                         ("loss", "nll", "grad_norm", "lr")}
+        return (step_fn, (state, batch), (state_shard, dshard),
+                (state_shard, metrics_shard))
+
+    # serving cells: bf16 params; cache KV heads padded to the TP axis
+    params = M.abstract_params(cfg, dtype=jnp.bfloat16)
+    pshard = S.param_shardings(cfg, params, mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    cache = M.init_cache(cfg, GB, T, dtype=jnp.bfloat16, abstract=True,
+                         kv_pad_to=sizes.get("model", 1))
+    cshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                          S.cache_specs(cfg, cache, mesh, GB))
+    fe = _frontend_spec(cfg, GB)
+    fe_shard = None if fe is None else NamedSharding(
+        mesh, S.data_specs(mesh, fe.shape))
+
+    if shape.kind == "prefill":
+        step_fn = make_prefill_step(cfg)
+        tokens = jax.ShapeDtypeStruct((GB, T), jnp.int32)
+        tshard = NamedSharding(mesh, S.data_specs(mesh, tokens.shape))
+        args = (params, tokens, cache) + ((fe,) if fe is not None else ())
+        in_sh = (pshard, tshard, cshard) + ((fe_shard,) if fe is not None else ())
+        logits_shard = NamedSharding(mesh, S.data_specs(mesh, (GB, 1, 1)))
+        return step_fn, args, in_sh, (logits_shard, cshard)
+
+    if shape.kind == "decode":
+        step_fn = make_serve_step(cfg)
+        token = jax.ShapeDtypeStruct((GB, 1), jnp.int32)
+        tshard = NamedSharding(mesh, S.data_specs(mesh, token.shape))
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        args = (params, token, cache, pos) + ((fe,) if fe is not None else ())
+        in_sh = (pshard, tshard, cshard, repl) + \
+            ((fe_shard,) if fe is not None else ())
+        logits_shard = NamedSharding(mesh, S.data_specs(mesh, (GB, 1, 1)))
+        return step_fn, args, in_sh, (logits_shard, cshard)
+
+    raise ValueError(shape.kind)
+
+
+def cell_is_applicable(cfg: ArchConfig, shape: ShapeCfg) -> tuple[bool, str]:
+    """DESIGN.md §5: long_500k is skipped for pure full-attention archs."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: 500k decode cell skipped " \
+                      "(DESIGN.md §5)"
+    return True, ""

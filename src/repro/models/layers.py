@@ -1,0 +1,447 @@
+"""Model layers. Every GEMM routes through the SA precision policy
+(`repro.core.precision.sa_dot` / `sa_einsum`) — the paper's reduced-precision
+chained-accumulate contract is the framework's arithmetic everywhere.
+
+Attention is flash-style blockwise (two-level `lax.scan`, online softmax in
+fp32): O(T·block) memory, compiles at 32k/500k sequence lengths, and maps the
+"never materialize the unnormalized chain" idea to the softmax accumulator.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.precision import sa_dot, sa_einsum
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, w, b, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * lax.rsqrt(var + eps) * w.astype(jnp.float32) + b.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def norm_apply(x, p, kind="rmsnorm", eps=1e-6):
+    if kind == "layernorm":
+        return layernorm(x, p["w"], p["b"], eps)
+    return rmsnorm(x, p["w"], eps)
+
+
+def act_fn(x, kind="silu"):
+    return jax.nn.silu(x) if kind == "silu" else jax.nn.gelu(x)
+
+
+def softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float):
+    return theta ** (-jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., T, hd); positions: broadcastable to (..., T)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, kv_pos, causal: bool, window: int):
+    """(bq, bkv) additive bias: 0 where visible, -inf where masked."""
+    ok = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        ok &= q_pos[:, None] >= kv_pos[None, :]
+    if window:
+        ok &= q_pos[:, None] - kv_pos[None, :] < window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def _div_block(n, target):  # largest divisor of n that is <= target
+    b = min(target, n)
+    while n % b:
+        b -= 1
+    return b
+
+
+def _scores(q_i, k_j, q_pos, kv_pos, causal, window, cap, scale):
+    """Raw + masked-capped scores for one (q-block, kv-block) tile."""
+    s_raw = sa_einsum("bqhgd,bkhd->bhgqk", q_i, k_j).astype(jnp.float32)
+    s = softcap(s_raw * scale, cap)
+    s = s + _mask_bias(q_pos, kv_pos, causal, window)[None, None, None]
+    return s_raw, s
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _flash(q, k, v, causal, window, cap, q_offset, bq, bkv, scale):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, cap, q_offset, bq, bkv,
+                             scale)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, window, cap, q_offset, bq, bkv, scale):
+    """Online-softmax forward. Returns (out (B,KVH,g,T,hd), lse)."""
+    B, T, KVH, g, hd = q.shape
+    S = k.shape[1]
+    nq, nkv = T // bq, S // bkv
+    qb = q.reshape(B, nq, bq, KVH, g, hd)
+    kb, vb = (x.reshape(B, nkv, bkv, KVH, hd) for x in (k, v))
+
+    def q_step(_, qi):
+        q_i, iq = qi
+        q_pos = q_offset + iq * bq + jnp.arange(bq)
+
+        def kv_step(carry, kvj):
+            acc, m, l = carry
+            k_j, v_j, jk = kvj
+            kv_pos = jk * bkv + jnp.arange(bkv)
+            _, s = _scores(q_i, k_j, q_pos, kv_pos, causal, window, cap, scale)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # fully-masked tiles (sliding windows) leave m_new = -inf; the
+            # guard keeps exp() at exactly 0 instead of NaN
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            # online softmax: the running (unnormalized) accumulator is
+            # normalized once at the end — the softmax analogue of the
+            # round-once-per-column reduction.
+            p = jnp.exp(s - m_safe[..., None])
+            corr = jnp.exp(m - m_safe)
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = sa_einsum("bhgqk,bkhd->bhgqd", p.astype(q.dtype), v_j)
+            acc = acc * corr[..., None] + pv.astype(jnp.float32)
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, KVH, g, bq, hd), jnp.float32)
+        m0 = jnp.full((B, KVH, g, bq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KVH, g, bq), jnp.float32)
+        (acc, m, l), _ = lax.scan(
+            kv_step, (acc0, m0, l0),
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1), jnp.arange(nkv)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (out.astype(q.dtype), lse)
+
+    _, (blocks, lses) = lax.scan(q_step, None,
+                                 (qb.swapaxes(0, 1), jnp.arange(nq)))
+    # blocks: (nq, B, KVH, g, bq, hd) → (B, KVH, g, T, hd)
+    out = blocks.transpose(1, 2, 3, 0, 4, 5).reshape(B, KVH, g, T, hd)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, KVH, g, T)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, window, cap, q_offset, bq, bkv, scale):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, cap, q_offset, bq,
+                               bkv, scale)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, cap, q_offset, bq, bkv, scale, res, dout):
+    """Flash backward: recompute p per tile; O(block²) memory.
+
+    dq pass scans q blocks (kv inner); dk/dv pass scans kv blocks (q inner).
+    """
+    q, k, v, out, lse = res
+    B, T, KVH, g, hd = q.shape
+    S = k.shape[1]
+    nq, nkv = T // bq, S // bkv
+    qb = q.reshape(B, nq, bq, KVH, g, hd)
+    kb, vb = (x.reshape(B, nkv, bkv, KVH, hd) for x in (k, v))
+    doutb = dout.reshape(B, KVH, g, nq, bq, hd)
+    lseb = lse.reshape(B, KVH, g, nq, bq)
+    # delta = rowsum(dout ⊙ out)
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), -1)
+    deltab = delta.reshape(B, KVH, g, nq, bq)
+
+    def p_and_ds(q_i, k_j, v_j, do_i, lse_i, dl_i, iq, jk):
+        q_pos = q_offset + iq * bq + jnp.arange(bq)
+        kv_pos = jk * bkv + jnp.arange(bkv)
+        s_raw, s = _scores(q_i, k_j, q_pos, kv_pos, causal, window, cap, scale)
+        p = jnp.exp(s - lse_i[..., None])                      # (B,h,g,bq,bkv)
+        dp = sa_einsum("bhgqd,bkhd->bhgqk", do_i, v_j).astype(jnp.float32)
+        ds = p * (dp - dl_i[..., None])
+        if cap:   # softcap jacobian: d tanh = 1 - tanh²
+            ds = ds * (1.0 - (softcap(s_raw * scale, cap) / cap) ** 2)
+        return p, ds * scale
+
+    def dq_step(_, xs):
+        q_i, do_i, lse_i, dl_i, iq = xs
+
+        def inner(dq_acc, kvj):
+            k_j, v_j, jk = kvj
+            _, ds = p_and_ds(q_i, k_j, v_j, do_i, lse_i, dl_i, iq, jk)
+            dq_acc += sa_einsum("bhgqk,bkhd->bqhgd", ds.astype(q.dtype), k_j
+                                ).astype(jnp.float32)
+            return dq_acc, None
+
+        dq0 = jnp.zeros((B, bq, KVH, g, hd), jnp.float32)
+        dq_i, _ = lax.scan(inner, dq0, (kb.swapaxes(0, 1),
+                                        vb.swapaxes(0, 1), jnp.arange(nkv)))
+        return None, dq_i
+
+    _, dq_blocks = lax.scan(
+        dq_step, None,
+        (qb.swapaxes(0, 1), doutb.transpose(3, 0, 1, 2, 4, 5),
+         lseb.transpose(3, 0, 1, 2, 4), deltab.transpose(3, 0, 1, 2, 4),
+         jnp.arange(nq)))
+    dq = dq_blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, T, KVH, g, hd)
+
+    def dkv_step(_, xs):
+        k_j, v_j, jk = xs
+
+        def inner(carry, qs):
+            dk_acc, dv_acc = carry
+            q_i, do_i, lse_i, dl_i, iq = qs
+            p, ds = p_and_ds(q_i, k_j, v_j, do_i, lse_i, dl_i, iq, jk)
+            dv_acc += sa_einsum("bhgqk,bhgqd->bkhd", p.astype(q.dtype), do_i
+                                ).astype(jnp.float32)
+            dk_acc += sa_einsum("bhgqk,bqhgd->bkhd", ds.astype(q.dtype), q_i
+                                ).astype(jnp.float32)
+            return (dk_acc, dv_acc), None
+
+        z = jnp.zeros((B, bkv, KVH, hd), jnp.float32)
+        (dk_j, dv_j), _ = lax.scan(
+            inner, (z, z),
+            (qb.swapaxes(0, 1), doutb.transpose(3, 0, 1, 2, 4, 5),
+             lseb.transpose(3, 0, 1, 2, 4), deltab.transpose(3, 0, 1, 2, 4),
+             jnp.arange(nq)))
+        return None, (dk_j, dv_j)
+
+    _, (dk_blocks, dv_blocks) = lax.scan(
+        dkv_step, None, (kb.swapaxes(0, 1), vb.swapaxes(0, 1),
+                         jnp.arange(nkv)))
+    dk = dk_blocks.transpose(1, 0, 2, 3, 4).reshape(B, S, KVH, hd)
+    dv = dv_blocks.transpose(1, 0, 2, 3, 4).reshape(B, S, KVH, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def blockwise_attention(q, k, v, *, causal=True, window=0, cap=0.0,
+                        q_offset=0, block_q=1024, block_kv=1024, scale=None):
+    """q: (B, T, H, hd); k, v: (B, S, KVH, hd) → (B, T, H, hd).
+
+    Flash-style attention with a custom VJP: forward keeps only (out, lse);
+    backward recomputes probabilities tile-by-tile — O(T·block) memory in
+    both passes at any sequence length. GQA via grouped query heads; all
+    contractions under the SA contract (bf16 in, fp32 accumulate).
+    """
+    B, T, H, hd = q.shape
+    S, KVH = k.shape[1], k.shape[2]
+    g = H // KVH
+    scale = scale or hd ** -0.5
+    bq, bkv = _div_block(T, block_q), _div_block(S, block_kv)
+    qg = q.reshape(B, T, KVH, g, hd)
+    out = _flash(qg, k, v, causal, window, cap, q_offset, bq, bkv, scale)
+    # (B, KVH, g, T, hd) → (B, T, H, hd)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, T, H, hd)
+
+
+def decode_attention(q, k_cache, v_cache, kv_positions, pos, *, window=0,
+                     cap=0.0, scale=None):
+    """Single-token attention against a (possibly ring-buffer) cache.
+
+    q: (B, 1, H, hd); caches: (B, S, KVH, hd); kv_positions: (S,) original
+    token position per slot (-1 = empty); pos: scalar current position.
+    """
+    B, _, H, hd = q.shape
+    S, KVH = k_cache.shape[1], k_cache.shape[2]
+    g = H // KVH
+    scale = scale or hd ** -0.5
+    qg = q.reshape(B, KVH, g, hd)
+    s = sa_einsum("bhgd,bkhd->bhgk", qg, k_cache).astype(jnp.float32)
+    s = softcap(s * scale, cap)
+    ok = (kv_positions >= 0) & (kv_positions <= pos)
+    if window:
+        ok &= kv_positions > pos - window
+    s = jnp.where(ok[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = sa_einsum("bhgk,bkhd->bhgd", p.astype(q.dtype), v_cache)
+    return out.reshape(B, 1, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + attention)
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, S_cache, KVH, hd)
+    v: jax.Array
+    positions: jax.Array  # (S_cache,) int32, -1 = empty
+
+
+def qkv_project(x, p, cfg, meta):
+    """x: (B, T, D) → q (B,T,H,hd), k/v (B,T,KVH,hd)."""
+    B, T, _ = x.shape
+    q = sa_dot(x.reshape(B * T, -1), p["wq"]).reshape(B, T, cfg.num_heads, cfg.hd)
+    k = sa_dot(x.reshape(B * T, -1), p["wk"]).reshape(B, T, cfg.num_kv_heads, cfg.hd)
+    v = sa_dot(x.reshape(B * T, -1), p["wv"]).reshape(B, T, cfg.num_kv_heads, cfg.hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(cfg.num_heads, cfg.hd)
+        k = k + p["bk"].reshape(cfg.num_kv_heads, cfg.hd)
+        v = v + p["bv"].reshape(cfg.num_kv_heads, cfg.hd)
+    return q, k, v
+
+
+def attn_out(x_attn, p):
+    B, T, H, hd = x_attn.shape
+    return sa_dot(x_attn.reshape(B * T, H * hd), p["wo"]).reshape(B, T, -1)
+
+
+def padded_kvh(kvh: int, tp: int) -> int:
+    """KV head count after TP padding (optflags: pad_kv_heads)."""
+    from repro.core import optflags
+    if tp <= 1 or kvh % tp == 0 or not optflags.enabled("pad_kv_heads"):
+        return kvh
+    return -(-kvh // tp) * tp
+
+
+def _pad_heads(q, k, v, kvh_target: int):
+    """Zero-pad KV heads (and the kv-major grouped Q heads) to kvh_target.
+
+    Without this, KVH that doesn't divide the 16-way model axis makes the
+    SPMD partitioner REPLICATE every attention einsum across the axis
+    (16× FLOPs on phi3; full cache reshards per decode step). Zero k/v heads
+    produce garbage outputs only in the padded q-head slots, which are
+    sliced away (EXPERIMENTS.md §Perf, hillclimb 1).
+    """
+    B, T, KVH, hd = k.shape
+    H = q.shape[2]
+    g = H // KVH
+    pad = kvh_target - KVH
+    if pad <= 0:
+        return q, k, v, H
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    q = jnp.pad(q, ((0, 0), (0, 0), (0, pad * g), (0, 0)))
+    return q, k, v, H
+
+
+def attention_block(x, p, cfg, meta, positions, cache: KVCache | None = None,
+                    pos=None, rope: bool = True, causal: bool = True,
+                    kv_override=None):
+    """Full attention sub-layer. Returns (out, new_cache).
+
+    meta: layer descriptor {"attn": "global"|"local"}. If `cache` is given and
+    x is a single token, runs the decode path (ring-buffer update for local
+    layers). `kv_override` supplies cross-attention K/V source outputs.
+    """
+    from repro.parallel import sharding as S_
+    window = cfg.window if meta.get("attn") == "local" else 0
+    theta = cfg.rope_theta
+    q, k, v = qkv_project(x, p, cfg, meta)
+    rope_kv = kv_override is None
+    if kv_override is not None:          # cross-attention: kv from encoder
+        k, v = kv_override
+    if rope:                             # positions: (B, T)
+        q = apply_rope(q.transpose(0, 2, 1, 3), positions[:, None, :],
+                       theta).transpose(0, 2, 1, 3)
+        if rope_kv:
+            k = apply_rope(k.transpose(0, 2, 1, 3), positions[:, None, :],
+                           theta).transpose(0, 2, 1, 3)
+    # TP head padding: cache layout wins if present; the pure-training path
+    # pads only where the arch opts in (cfg.pad_attn_train — see config.py)
+    H_orig = q.shape[2]
+    if cache is not None:
+        kvh_target = cache.k.shape[-2]
+    elif cfg.pad_attn_train:
+        kvh_target = padded_kvh(k.shape[2], S_.axis_count("model"))
+    else:
+        kvh_target = k.shape[2]
+    padding_active = kvh_target != k.shape[2] or cache is not None
+    q, k, v, H_orig = _pad_heads(q, k, v, kvh_target)
+    if padding_active:
+        # pin the head-sharded layout (cache-matching / replication fix);
+        # un-padded training paths keep XLA's own layout choice — forcing
+        # head sharding there only adds reshards (measured, §Perf)
+        q = S_.constrain(q, "batch", None, "model", None)
+        k = S_.constrain(k, "batch", None, "model", None)
+        v = S_.constrain(v, "batch", None, "model", None)
+    new_cache = None
+    if cache is not None and x.shape[1] == 1:
+        slot = pos % cache.k.shape[1]
+        k_c = lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), slot, axis=1)
+        v_c = lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), slot, axis=1)
+        pos_c = lax.dynamic_update_slice_in_dim(
+            cache.positions, pos[None].astype(jnp.int32), slot, axis=0)
+        new_cache = KVCache(k_c, v_c, pos_c)
+        o = decode_attention(q, k_c, v_c, pos_c, pos, window=window,
+                             cap=cfg.attn_softcap)
+    else:
+        from repro.core import optflags
+        if cache is not None and optflags.enabled("pallas_attention"):
+            # serving prefill is forward-only: use the Pallas flash kernel
+            # (VMEM-resident softmax state; kernels/sa_attention.py)
+            from repro.kernels.ops import sa_attention
+            o = sa_attention(q.transpose(0, 2, 1, 3),
+                             k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3),
+                             causal=causal, window=window,
+                             cap=cfg.attn_softcap).transpose(0, 2, 1, 3)
+        else:
+            o = blockwise_attention(q, k, v, causal=causal, window=window,
+                                    cap=cfg.attn_softcap)
+        if cache is not None:            # prefill: fill the cache
+            S = cache.k.shape[1]
+            T = k.shape[1]
+            k = k.astype(cache.k.dtype)
+            v = v.astype(cache.v.dtype)
+            if T >= S:                   # keep last S positions (ring)
+                k_keep, v_keep = k[:, -S:], v[:, -S:]
+                pos_keep = positions[0, -S:].astype(jnp.int32)
+                # ring layout: slot = pos % S
+                slots = pos_keep % S
+                k_c = jnp.zeros_like(cache.k).at[:, slots].set(k_keep)
+                v_c = jnp.zeros_like(cache.v).at[:, slots].set(v_keep)
+                pos_c = jnp.full_like(cache.positions, -1).at[slots].set(pos_keep)
+            else:
+                k_c = lax.dynamic_update_slice_in_dim(cache.k, k, 0, axis=1)
+                v_c = lax.dynamic_update_slice_in_dim(cache.v, v, 0, axis=1)
+                pos_c = lax.dynamic_update_slice_in_dim(
+                    cache.positions, positions[0].astype(jnp.int32), 0, axis=0)
+            new_cache = KVCache(k_c, v_c, pos_c)
+    o = o[:, :, :H_orig]   # drop padded q-head outputs before the projection
+    return attn_out(o, p), new_cache
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+def ffn_swiglu(x, p, act="silu"):
+    B, T, D = x.shape
+    xf = x.reshape(B * T, D)
+    h = act_fn(sa_dot(xf, p["wg"]), act) * sa_dot(xf, p["wu"])
+    return sa_dot(h, p["wd"]).reshape(B, T, D)
+
+
+def ffn_mlp(x, p, act="gelu"):
+    B, T, D = x.shape
+    xf = x.reshape(B * T, D)
+    return sa_dot(act_fn(sa_dot(xf, p["w1"]), act), p["w2"]).reshape(B, T, D)

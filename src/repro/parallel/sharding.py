@@ -1,0 +1,250 @@
+"""Sharding rules: parameter/activation PartitionSpecs for the production mesh.
+
+Axes: `model` = TP/EP (attention heads, FFN width, experts, vocab);
+`data` (+ `pod` when present) = DP, and additionally FSDP for archs flagged
+`fsdp=True` (llama4-maverick: 400 B params must shard over *all* axes).
+Stacked superblock leaves carry a leading scan dimension → specs are
+prepended with None.
+
+The rules are path-based over the param pytree, so new layer types only need
+a new rule entry.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# --------------------------------------------------------------------------
+# Activation sharding constraints (used *inside* model code)
+# --------------------------------------------------------------------------
+# Model code runs both under the production mesh (dry-run, launchers) and
+# meshless (CPU unit tests). Launchers register the active mesh; `constrain`
+# becomes a no-op when none is set, and silently replicates any dim the mesh
+# axis doesn't divide (same rule as parameter sharding).
+
+_ACTIVE_MESH: Mesh | None = None
+
+
+def set_active_mesh(mesh: Mesh | None):
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def active_mesh() -> Mesh | None:
+    return _ACTIVE_MESH
+
+
+def axis_count(name: str) -> int:
+    if _ACTIVE_MESH is None or name not in _ACTIVE_MESH.axis_names:
+        return 1
+    return dict(zip(_ACTIVE_MESH.axis_names,
+                    _ACTIVE_MESH.devices.shape))[name]
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint against the active mesh (no-op if none).
+
+    `axes` entries: None, axis name, tuple of names, or "batch" (expands to
+    the DP axes of the active mesh)."""
+    if _ACTIVE_MESH is None:
+        return x
+    sizes = dict(zip(_ACTIVE_MESH.axis_names, _ACTIVE_MESH.devices.shape))
+
+    def expand(a):
+        if a == "batch":
+            return batch_axes(_ACTIVE_MESH)
+        return a
+
+    def nsize(a):
+        if a is None:
+            return 1
+        names = a if isinstance(a, tuple) else (a,)
+        n = 1
+        for x_ in names:
+            n *= sizes[x_]
+        return n
+
+    axes = tuple(expand(a) for a in axes)
+    axes = axes + (None,) * (x.ndim - len(axes))
+    spec = P(*(a if d % nsize(a) == 0 else None
+               for a, d in zip(axes, x.shape)))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ACTIVE_MESH, spec))
+
+
+def _param_rule(path: str, ndim: int, cfg: ArchConfig, fsdp,
+                model_size: int) -> P:
+    """PartitionSpec for one (unstacked) parameter leaf."""
+    f = fsdp if cfg.fsdp else None
+    ep = cfg.num_experts > 0 and cfg.num_experts % model_size == 0
+    # modality-agnostic rules, most-specific first
+    if "embed" in path:
+        return P("model", f)
+    if "lm_head" in path:
+        return P(f, "model")
+    if any(k in path for k in ("wq", "wk", "wv", "wg", "wu", "w1")):
+        if ndim == 3:                       # stacked experts (E, D, F)
+            # EP when expert count divides the TP axis, else TP inside expert
+            return P("model", f, None) if ep else P(None, f, "model")
+        return P(f, "model")
+    if any(k in path for k in ("wo", "wd", "w2")):
+        if ndim == 3:                       # experts (E, F, D)
+            return P("model", None, f) if ep else P(None, "model", f)
+        return P("model", f)
+    if "router" in path:
+        return P(f, None)
+    if any(k in path for k in ("bq", "bk", "bv")):
+        return P("model")
+    if "in_proj" in path:
+        return P(f, "model")
+    if "out_proj" in path:
+        return P("model", f)
+    if "conv_w" in path:
+        return P(None, "model")
+    if any(k in path for k in ("A_log", "dt_bias")):
+        return P("model")
+    if any(k in path for k in ("D_skip", "norm_w")):
+        return P("model")
+    return P()  # norms, scalars: replicated
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+    return "/".join(parts)
+
+
+def param_specs(cfg: ArchConfig, params_tree: Any, mesh: Mesh):
+    """PartitionSpec pytree matching `params_tree` (abstract or concrete)."""
+    fsdp = batch_axes(mesh) if len(batch_axes(mesh)) > 1 else batch_axes(mesh)[0]
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def axis_size(a) -> int:
+        if a is None:
+            return 1
+        if isinstance(a, tuple):
+            n = 1
+            for x in a:
+                n *= sizes[x]
+            return n
+        return sizes[a]
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        stacked = "layers" in ps            # scan-stacked: leading block dim
+        nd = len(leaf.shape) - (1 if stacked else 0)
+        rule = _param_rule(ps, nd, cfg, fsdp, sizes["model"])
+        if stacked:
+            rule = P(None, *rule)
+        # pad/trim to the leaf rank (biases, scalars)
+        rule = tuple(rule)[: len(leaf.shape)]
+        rule = rule + (None,) * (len(leaf.shape) - len(rule))
+        # divisibility guard: explicit pjit shardings require even splits —
+        # replicate any dim the mesh axis doesn't divide (e.g. granite's 40
+        # experts over model=16, hymba's fused in_proj width).
+        rule = tuple(a if dim % axis_size(a) == 0 else None
+                     for a, dim in zip(rule, leaf.shape))
+        return P(*rule)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_tree)
+
+
+def param_shardings(cfg: ArchConfig, params_tree: Any, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, params_tree, mesh))
+
+
+def data_specs(mesh: Mesh, tokens_shape: tuple[int, ...]) -> P:
+    """Input token sharding: batch over DP axes (global batch permitting)."""
+    ba = batch_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = 1
+    for a in ba:
+        dp *= sizes[a]
+    if tokens_shape[0] % dp == 0:
+        return P(ba, *([None] * (len(tokens_shape) - 1)))
+    return P(*([None] * len(tokens_shape)))
+
+
+def cache_specs(cfg: ArchConfig, cache_tree: Any, mesh: Mesh, batch: int):
+    """KV/SSM cache sharding for serving.
+
+    Batch-shardable cells shard batch over DP axes; the `long_500k` cell
+    (batch=1) shards the KV *sequence* dim over `data` instead (sequence
+    parallelism for the long-context cache).
+    """
+    ba = batch_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = 1
+    for a in ba:
+        dp *= sizes[a]
+    batch_ok = batch % dp == 0
+
+    sizes_all = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fit(spec, shape):
+        """Replicate dims the axis doesn't divide (explicit-sharding rule)."""
+        def axis_size(a):
+            if a is None:
+                return 1
+            axes = a if isinstance(a, tuple) else (a,)
+            n = 1
+            for x in axes:
+                n *= sizes_all[x]
+            return n
+        return P(*(a if d % axis_size(a) == 0 else None
+                   for a, d in zip(tuple(spec), shape)))
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        nd = len(leaf.shape)
+        if ps.endswith("positions"):
+            if not batch_ok and nd == 2:    # (n_super, S): S over data
+                return fit(P(None, "data"), leaf.shape)
+            return P(*([None] * nd))
+        if "ssm" in ps:
+            if nd == 5:   # state: (n_super, B, H, P, N) — TP on head dim P
+                return fit(P(None, ba if batch_ok else None, None, "model",
+                             None), leaf.shape)
+            if nd == 4:   # conv tail: (n_super, B, KW-1, conv_dim)
+                return fit(P(None, ba if batch_ok else None, None, "model"),
+                           leaf.shape)
+            return P(*([None] * nd))
+        if nd == 5:       # k/v: (n_super, B, S, KVH, hd)
+            kvh = leaf.shape[3]
+            model_n = sizes_all.get("model", 1)
+            # padded caches shard on heads (matches the attention compute —
+            # no per-step reshard); unpadded fall back to the head *dim*
+            if kvh % model_n == 0:
+                kv_spec, hd_spec = "model", None
+            else:
+                kv_spec, hd_spec = None, "model"
+            if batch_ok:
+                return fit(P(None, ba, None, kv_spec, hd_spec), leaf.shape)
+            # long-context: sequence parallelism over `data`
+            return fit(P(None, None, "data", kv_spec, hd_spec), leaf.shape)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_tree)
+
+
+def activation_spec(mesh: Mesh, batch: int):
+    """with_sharding_constraint target for the residual stream."""
+    ba = batch_axes(mesh)
+    return P(ba, None, None)

@@ -1,0 +1,61 @@
+"""Batched serving engine: jitted prefill + decode with KV/SSM caches.
+
+Static-batch continuous serving: slots hold independent sequences; finished
+slots are refilled by the driver (`launch/serve.py`). Decode is one jitted
+step per token over the whole batch — the `decode_*` dry-run cells lower
+exactly this function.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models import model as M
+from repro.train.step import make_prefill_step, make_serve_step
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params: Any, batch: int,
+                 cache_len: int, eos_id: int = 2, cache_dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.cache_len = cache_len
+        self.eos_id = eos_id
+        self.cache_dtype = cache_dtype
+        self._prefill = jax.jit(make_prefill_step(cfg))
+        self._decode = jax.jit(make_serve_step(cfg))
+
+    def new_cache(self):
+        return M.init_cache(self.cfg, self.batch, self.cache_len,
+                            dtype=self.cache_dtype)
+
+    def generate(self, prompts: jax.Array, max_new_tokens: int,
+                 frontend=None, greedy: bool = True, rng=None):
+        """prompts: (B, T_prompt) int32 → (B, max_new_tokens) int32."""
+        B, T = prompts.shape
+        assert B == self.batch
+        cache = self.new_cache()
+        logits, cache = self._prefill(self.params, prompts, cache, frontend)
+        out = []
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        done = jnp.zeros((B,), bool)
+        rng = rng if rng is not None else jax.random.key(0)
+        for i in range(max_new_tokens):
+            out.append(tok)
+            done = done | (tok == self.eos_id)
+            pos = jnp.int32(T + i)
+            logits, cache = self._decode(self.params, tok[:, None], cache,
+                                         pos, frontend)
+            if greedy:
+                tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            else:
+                rng, k = jax.random.split(rng)
+                tok = jax.random.categorical(k, logits[:, -1]).astype(jnp.int32)
+            if bool(done.all()):
+                break
+        return jnp.stack(out, axis=1)

@@ -1,0 +1,147 @@
+"""Checkpointing: async, atomic, content-hashed, elastic on restore.
+
+Layout (one directory per step):
+
+    <dir>/step_000000123/
+        manifest.msgpack    tree structure, shapes, dtypes, sha256 per leaf
+        arr_00000.npy ...   one file per leaf
+    <dir>/latest            text file → step directory name (atomic rename)
+
+Properties needed at 1000+ nodes, scaled to this container honestly:
+  * **atomicity** — written to `<name>.tmp`, fsync'd, then renamed; `latest`
+    updated last. A preempted writer never corrupts the previous checkpoint.
+  * **async** — `save_async` snapshots to host RAM (device_get) and writes on
+    a background thread; the train loop blocks only on the snapshot.
+  * **integrity** — sha256 per leaf, verified on restore.
+  * **elastic reshard-on-load** — leaves are stored as full logical arrays
+    and `restore(..., shardings=...)` lays them out on whatever mesh is
+    alive (different device count than the writer is fine). At true 400 B
+    scale one would write per-shard files; the manifest already records
+    enough metadata to extend to that (documented limitation).
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import threading
+
+import jax
+import ml_dtypes
+import msgpack
+import numpy as np
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve numpy + ml_dtypes (bfloat16, fp8) dtype names."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, step: int, tree, extra: dict | None = None) -> str:
+    """Synchronous atomic save. Returns the checkpoint directory."""
+    os.makedirs(path, exist_ok=True)
+    name = f"step_{step:09d}"
+    tmp = os.path.join(path, name + ".tmp")
+    final = os.path.join(path, name)
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "extra": extra or {},
+        "leaves": [],
+    }
+    host = [np.asarray(jax.device_get(x)) for x in leaves]
+    for i, arr in enumerate(host):
+        fn = f"arr_{i:05d}.npy"
+        np.save(os.path.join(tmp, fn), arr)
+        manifest["leaves"].append({
+            "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "sha256": hashlib.sha256(arr.tobytes()).hexdigest(),
+        })
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        import shutil
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    # pointer file last — readers never see a partial checkpoint
+    ptr_tmp = os.path.join(path, "latest.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(name)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(ptr_tmp, os.path.join(path, "latest"))
+    return final
+
+
+class AsyncSaver:
+    """Snapshot-now, write-later checkpointing."""
+
+    def __init__(self):
+        self._thread: threading.Thread | None = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save_async(self, path: str, step: int, tree, extra=None):
+        self.wait()
+        snapshot = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._thread = threading.Thread(
+            target=save, args=(path, step, snapshot, extra), daemon=False)
+        self._thread.start()
+
+
+def latest_step(path: str) -> int | None:
+    ptr = os.path.join(path, "latest")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        return int(f.read().strip().split("_")[-1])
+
+
+def restore(path: str, target_tree, step: int | None = None,
+            shardings=None, verify: bool = True):
+    """Load into the structure of `target_tree` (abstract or concrete).
+
+    `shardings`: optional matching pytree of NamedShardings — the elastic
+    path: arrays are device_put onto the *current* mesh regardless of the
+    topology that wrote them.
+    """
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {path}")
+    cdir = os.path.join(path, f"step_{step:09d}")
+    with open(os.path.join(cdir, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    leaves, treedef = _flatten(target_tree)
+    assert len(leaves) == len(manifest["leaves"]), \
+        (len(leaves), len(manifest["leaves"]), "tree structure changed")
+    out = []
+    shard_leaves = jax.tree.leaves(shardings) if shardings is not None \
+        else [None] * len(leaves)
+    for meta, ref, shard in zip(manifest["leaves"], leaves, shard_leaves):
+        arr = np.load(os.path.join(cdir, meta["file"]))
+        if arr.dtype.kind == "V":      # npy stores bf16/fp8 as raw void
+            arr = arr.view(_np_dtype(meta["dtype"]))
+        if verify:
+            h = hashlib.sha256(arr.tobytes()).hexdigest()
+            if h != meta["sha256"]:
+                raise IOError(f"checkpoint corruption in {meta['file']}")
+        if shard is not None:
+            out.append(jax.device_put(arr, shard))
+        else:
+            out.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    return treedef.unflatten(out), manifest["extra"], step

@@ -1,0 +1,76 @@
+"""Optimizer library (no optax in this environment — built from scratch).
+
+AdamW with fp32 master statistics, global-norm clipping, and warmup+cosine
+schedules. API mirrors the (init, update) convention so tests can check
+against a numpy reference step-by-step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Callable:
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return schedule
+
+
+def constant_lr(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    mu: dict
+    nu: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    schedule: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AdamWState(count=jnp.zeros((), jnp.int32), mu=z,
+                          nu=jax.tree.map(jnp.copy, z))
+
+    def update(self, grads, state: AdamWState, params):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        # global-norm clip
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-12)) \
+            if self.clip_norm else 1.0
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        count = state.count + 1
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                          state.nu, grads)
+        c = count.astype(jnp.float32)
+        bc1, bc2 = 1 - b1 ** c, 1 - b2 ** c
+        lr = self.schedule(count)
+
+        def step(p, m, v):
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            upd = upd + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        new_params = jax.tree.map(step, params, mu, nu)
+        return new_params, AdamWState(count=count, mu=mu, nu=nu), \
+            {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,102 @@
+"""Train/serve step factories.
+
+`make_train_step` builds the jitted SPMD step: microbatch gradient
+accumulation via `lax.scan` (lets XLA overlap each microbatch's gradient
+reduce-scatter with the next microbatch's compute), remat inside the model's
+superblock scan, AdamW on fp32 masters.
+
+`make_serve_step` / `make_prefill_step` build the decode-path steps lowered
+by the `decode_*` / `long_*` dry-run cells.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ArchConfig
+from repro.models import model as M
+from .optimizer import AdamW
+from .train_state import TrainState
+
+
+def make_train_step(cfg: ArchConfig, opt: AdamW, accum_steps: int = 1,
+                    aux_weight: float = 0.01):
+    """Returns train_step(state, batch) → (state, metrics).
+
+    batch: {"tokens": (B, T) i32, "labels": (B, T) i32,
+            optional "frontend": (B, S, d) f32}.
+    With accum_steps > 1, B must divide evenly; gradients are accumulated
+    over accum_steps microbatches in fp32.
+    """
+
+    def loss_fn(params, mb):
+        loss, nll = M.lm_loss(params, cfg, mb["tokens"], mb["labels"],
+                              frontend_embeds=mb.get("frontend"),
+                              aux_weight=aux_weight)
+        return loss, nll
+
+    def train_step(state: TrainState, batch):
+        params = state.params
+
+        if accum_steps == 1:
+            (loss, nll), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                # strided µbatches: row j of µbatch i is global row j·A + i,
+                # so each µbatch stays sharded across the FULL data axis
+                # (a contiguous reshape would split the DP axis between the
+                # scan dim and the batch dim — 8× the live activation set).
+                mb = x.shape[0] // accum_steps
+                return x.reshape(mb, accum_steps, *x.shape[1:]).swapaxes(0, 1)
+            mbs = {k: split(v) for k, v in batch.items()}
+
+            def accum(carry, mb):
+                g_acc, l_acc, n_acc = carry
+                (l, n), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l, n_acc + n), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, nll), _ = lax.scan(
+                accum, (g0, jnp.zeros(()), jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss, nll = loss / accum_steps, nll / accum_steps
+
+        new_params, opt_state, om = opt.update(grads, state.opt_state, params)
+        metrics = {"loss": loss, "nll": nll, **om}
+        return TrainState(step=state.step + 1, params=new_params,
+                          opt_state=opt_state), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    """prefill(params, tokens, cache, [frontend]) → (logits_last, cache)."""
+
+    def prefill(params, tokens, cache, frontend=None):
+        logits, cache, _ = M.forward(params, cfg, tokens, cache=cache,
+                                     frontend_embeds=frontend,
+                                     last_only=True)
+        return logits, cache
+
+    return prefill
+
+
+def make_serve_step(cfg: ArchConfig):
+    """One decode step: (params, token (B,1), cache, pos, [frontend]) →
+    (logits (B,1,V), new_cache). The `decode_*`/`long_*` dry-run target."""
+
+    def serve_step(params, token, cache, pos, frontend=None):
+        logits, cache, _ = M.forward(params, cfg, token, cache=cache,
+                                     pos=pos, frontend_embeds=frontend)
+        return logits, cache
+
+    return serve_step

@@ -1,0 +1,30 @@
+"""Train state pytree + abstract construction for the dry-run."""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models import model as M
+from .optimizer import AdamW, AdamWState
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any          # fp32 masters
+    opt_state: AdamWState
+
+
+def init_state(rng, cfg: ArchConfig, opt: AdamW) -> TrainState:
+    params = M.init_params(rng, cfg)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt_state=opt.init(params))
+
+
+def abstract_state(cfg: ArchConfig, opt: AdamW) -> TrainState:
+    """ShapeDtypeStruct state — the dry-run's zero-allocation stand-in."""
+    return jax.eval_shape(
+        functools.partial(init_state, cfg=cfg, opt=opt), jax.random.key(0))

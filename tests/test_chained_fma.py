@@ -1,0 +1,121 @@
+"""THE paper property (§III.B): the skewed pipeline's speculative exponent
+forwarding + retimed normalization is *exact* — bit-identical results to the
+baseline normalize-then-align pipeline, for every chain and format."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import chained_fma as cf
+from repro.core.fpformats import BF16, FP8_E4M3, FP8_E5M2, FP16, get_format, \
+    quantize_np
+
+
+def bits(x):
+    return np.asarray(x, np.float32).view(np.uint32)
+
+
+FMTS = [BF16, FP8_E4M3, FP8_E5M2, FP16]
+
+
+@pytest.mark.parametrize("fmt", FMTS, ids=lambda f: f.name)
+def test_skew_equals_baseline_random(fmt):
+    rng = np.random.default_rng(7)
+    for scale in (1.0, 17.0, 1e-3):
+        a = quantize_np(rng.standard_normal((64, 33)) * scale, fmt)
+        w = quantize_np(rng.standard_normal((33, 48)) * scale, fmt)
+        b = cf.matmul_emulated(a, w, fmt, "baseline")
+        s = cf.matmul_emulated(a, w, fmt, "skewed")
+        np.testing.assert_array_equal(bits(b), bits(s))
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(
+    st.floats(-1e4, 1e4, allow_nan=False, width=32),
+    st.floats(-1e4, 1e4, allow_nan=False, width=32)),
+    min_size=1, max_size=64))
+def test_skew_equals_baseline_hypothesis(pairs):
+    a = quantize_np(np.array([p[0] for p in pairs], np.float32), BF16)
+    w = quantize_np(np.array([p[1] for p in pairs], np.float32), BF16)
+    ac = a.reshape(-1, 1, 1)
+    wc = w.reshape(-1, 1, 1)
+    b = cf.baseline_chain(ac, wc, BF16)
+    s = cf.skewed_chain(ac, wc, BF16)
+    np.testing.assert_array_equal(bits(b), bits(s))
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.sampled_from(["bf16", "fp8_e4m3"]))
+def test_skew_equals_baseline_adversarial(seed, fmt_name):
+    """Cancellation-heavy chains: alternating signs, wide exponent swings."""
+    fmt = get_format(fmt_name)
+    rng = np.random.default_rng(seed)
+    k = rng.integers(1, 40)
+    mags = 2.0 ** rng.integers(-20, 20, size=k)
+    a = quantize_np(mags * rng.choice([-1.0, 1.0], k), fmt)
+    w = quantize_np(rng.standard_normal(k), fmt)
+    # inject exact zeros and repeated-value cancellations
+    if k > 4:
+        a[1] = 0.0
+        a[2], w[2] = a[0], -w[0] if fmt_name == "bf16" else w[2]
+    ac, wc = a.reshape(-1, 1), w.reshape(-1, 1)
+    b = cf.baseline_chain(ac, wc, fmt)
+    s = cf.skewed_chain(ac, wc, fmt)
+    np.testing.assert_array_equal(bits(b), bits(s))
+
+
+def test_chain_matches_float64_within_fp32_error():
+    rng = np.random.default_rng(3)
+    a = quantize_np(rng.standard_normal((8, 100)), BF16)
+    w = quantize_np(rng.standard_normal((100, 8)), BF16)
+    got = cf.matmul_emulated(a, w, BF16, "skewed").astype(np.float64)
+    ref = a.astype(np.float64) @ w.astype(np.float64)
+    # truncating FP32 accumulation: error bounded by ~K ulps of the running sum
+    err = np.abs(got - ref)
+    bound = 100 * np.spacing(np.abs(ref).max().astype(np.float32)).astype(np.float64)
+    assert err.max() <= bound * 4
+
+
+def test_exact_when_no_alignment_truncation():
+    """Products with equal exponents accumulate exactly (no bits dropped)."""
+    a = np.full((1, 16), 1.5, np.float32)
+    w = np.full((16, 1), 2.0, np.float32)
+    out = cf.matmul_emulated(a, w, BF16, "skewed")
+    assert out[0, 0] == np.float32(1.5 * 2.0 * 16)
+
+
+def test_zero_and_sign_edge_cases():
+    cases = [
+        ([0.0, 0.0, 0.0], [1.0, 2.0, 3.0], 0.0),
+        ([1.5, -1.5, 0.0], [1.0, 1.0, 5.0], 0.0),
+        # truncating 27-bit accumulator: the 2^-60 term is dropped by
+        # alignment before the big terms cancel (matches IEEE fp32 chains)
+        ([2.0**-60, 2.0**60, -(2.0**60)], [1.0, 1.0, 1.0], 0.0),
+    ]
+    for av, wv, want in cases:
+        a = np.asarray(av, np.float32).reshape(-1, 1)
+        w = np.asarray(wv, np.float32).reshape(-1, 1)
+        b = cf.baseline_chain(a, w, BF16)
+        s = cf.skewed_chain(a, w, BF16)
+        np.testing.assert_array_equal(bits(b), bits(s))
+        assert b.reshape(()) == np.float32(want)
+
+
+def test_speculation_algebra_dspec_correction():
+    """d = d' + L  (e_M ≥ ê) and |d| = |L − d'| (e_M < ê): spot-check the
+    fix unit against direct exponent arithmetic (paper §III.B equations)."""
+    rng = np.random.default_rng(11)
+    a = quantize_np(rng.standard_normal((200,)) * 3, BF16)
+    w = quantize_np(rng.standard_normal((200,)) * 3, BF16)
+    acc = cf.make_zero_unnorm(())
+    for k in range(200):
+        prod = cf.multiply(np.float32(a[k]), np.float32(w[k]), BF16)
+        nxt = cf.skewed_pe(prod, acc)
+        if acc.S != 0 and prod.m != 0:
+            e_prev = int(acc.ehat - acc.L)            # corrected exponent
+            d_true = abs(int(prod.e) - e_prev)
+            d_spec = abs(int(prod.e) - int(acc.ehat))
+            if prod.e >= acc.ehat:
+                assert d_true == d_spec + int(acc.L)   # paper eq., case 1
+            else:
+                assert d_true == abs(int(acc.L) - d_spec)  # case 2
+        acc = nxt

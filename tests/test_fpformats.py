@@ -1,0 +1,68 @@
+"""Reduced-precision format descriptors + quantization properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fpformats import (BF16, FP8_E4M3, FP8_E5M2, FP16, FORMATS,
+                                  compose, decompose, get_format, quantize_np)
+
+
+def test_format_constants_match_fig1():
+    assert (BF16.exp_bits, BF16.man_bits) == (8, 7)
+    assert (FP16.exp_bits, FP16.man_bits) == (5, 10)
+    assert (FP8_E4M3.exp_bits, FP8_E4M3.man_bits) == (4, 3)
+    assert (FP8_E5M2.exp_bits, FP8_E5M2.man_bits) == (5, 2)
+    assert FP8_E4M3.max_finite == 448.0           # OCP FP8 spec
+    assert FP8_E5M2.max_finite == 57344.0
+    assert BF16.emax == 127 and BF16.emin == -126
+
+
+@pytest.mark.parametrize("fmt", ["bf16", "fp16", "fp8_e4m3", "fp8_e5m2"])
+def test_quantize_idempotent(fmt):
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(512).astype(np.float32) * 7
+    q1 = quantize_np(x, fmt)
+    q2 = quantize_np(q1, fmt)
+    np.testing.assert_array_equal(q1, q2)
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.floats(allow_nan=False, allow_infinity=False, width=32),
+       st.sampled_from(["bf16", "fp8_e4m3", "fp8_e5m2", "fp16"]))
+def test_quantize_error_bound_and_monotonic(x, fmt_name):
+    fmt = get_format(fmt_name)
+    q = float(quantize_np(np.float32(x), fmt))
+    if abs(x) > fmt.max_finite:
+        if fmt.saturate:
+            assert abs(q) == fmt.max_finite
+        else:
+            assert np.isinf(q) or abs(q) == pytest.approx(fmt.max_finite)
+    elif abs(x) < fmt.min_normal:
+        assert q == 0.0                            # FTZ
+    else:
+        assert abs(q - x) <= 2.0 ** -fmt.man_bits * abs(x) * 0.5 * 1.0001
+        assert np.sign(q) == np.sign(x) or q == 0
+
+
+@pytest.mark.parametrize("fmt", ["bf16", "fp8_e4m3"])
+def test_decompose_compose_roundtrip(fmt):
+    fmt = get_format(fmt)
+    rng = np.random.default_rng(1)
+    x = quantize_np(rng.standard_normal(256).astype(np.float32), fmt)
+    s, e, m = decompose(x, fmt)
+    np.testing.assert_array_equal(compose(s, e, m, fmt), x)
+
+
+def test_bf16_matches_jnp_cast():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal(1024).astype(np.float32) * 100
+    ours = quantize_np(x, "bf16")
+    jnp_ = np.asarray(jnp.asarray(x).astype(jnp.bfloat16).astype(jnp.float32))
+    np.testing.assert_array_equal(ours, jnp_)
+
+
+def test_registry():
+    assert set(FORMATS) == {"fp32", "bf16", "fp16", "fp8_e4m3", "fp8_e5m2"}
+    with pytest.raises(ValueError):
+        get_format("fp4")

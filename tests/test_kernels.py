@@ -1,0 +1,105 @@
+"""Pallas kernels vs pure-jnp/numpy oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fpformats import BF16, FP8_E4M3, quantize_np
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _bf16_pair(m, k, n, scale=1.0):
+    a = quantize_np(RNG.standard_normal((m, k)).astype(np.float32) * scale, BF16)
+    w = quantize_np(RNG.standard_normal((k, n)).astype(np.float32) * scale, BF16)
+    return a, w
+
+
+# ---------------------------------------------------------------------------
+# sa_matmul: shape / dtype / block sweeps vs the round-once oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [
+    (8, 8, 8), (32, 64, 16), (128, 128, 128), (100, 96, 50),  # non-divisible
+    (1, 256, 1), (256, 1, 256), (33, 257, 65),
+])
+def test_sa_matmul_shapes(m, k, n):
+    a, w = _bf16_pair(m, k, n)
+    y = ops.sa_matmul(jnp.asarray(a, jnp.bfloat16), jnp.asarray(w, jnp.bfloat16),
+                      bm=32, bn=32, bk=64)
+    y_ref = ref.sa_matmul_ref(jnp.asarray(a, jnp.bfloat16),
+                              jnp.asarray(w, jnp.bfloat16))
+    scale = float(jnp.max(jnp.abs(y_ref))) + 1e-6
+    assert float(jnp.max(jnp.abs(y - y_ref))) / scale < 2e-6
+    assert y.shape == (m, n) and y.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 64), (64, 64, 32)])
+def test_sa_matmul_block_sweep(bm, bn, bk):
+    a, w = _bf16_pair(64, 96, 48)
+    y = ops.sa_matmul(jnp.asarray(a, jnp.bfloat16), jnp.asarray(w, jnp.bfloat16),
+                      bm=bm, bn=bn, bk=bk)
+    y_ref = ref.sa_matmul_ref(jnp.asarray(a, jnp.bfloat16),
+                              jnp.asarray(w, jnp.bfloat16))
+    assert float(jnp.max(jnp.abs(y - y_ref))) < 1e-4
+
+
+def test_sa_matmul_f32_inputs_exact():
+    """fp32 path: single K block ⇒ bit-identical to jnp reference."""
+    a = RNG.standard_normal((32, 48)).astype(np.float32)
+    w = RNG.standard_normal((48, 16)).astype(np.float32)
+    y = ops.sa_matmul(jnp.asarray(a), jnp.asarray(w), bm=32, bn=16, bk=48)
+    y_ref = jnp.matmul(jnp.asarray(a), jnp.asarray(w),
+                       preferred_element_type=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+# ---------------------------------------------------------------------------
+# fp_emu: the paper's exact datapath as a kernel, vs the numpy model
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt_name,scale", [
+    ("bf16", 1.0), ("bf16", 25.0), ("fp8_e4m3", 1.0), ("fp8_e5m2", 1.0),
+])
+def test_fp_emu_bitexact(fmt_name, scale):
+    from repro.core.fpformats import get_format
+    fmt = get_format(fmt_name)
+    a = quantize_np(RNG.standard_normal((24, 40)).astype(np.float32) * scale, fmt)
+    w = quantize_np(RNG.standard_normal((40, 18)).astype(np.float32) * scale, fmt)
+    y = np.asarray(ops.skewed_datapath_matmul(jnp.asarray(a), jnp.asarray(w),
+                                              fmt_name))
+    y_ref = ref.chained_fma_ref(a, w, fmt_name, "skewed")
+    np.testing.assert_array_equal(y.view(np.uint32), y_ref.view(np.uint32))
+
+
+def test_fp_emu_matches_mxu_contract():
+    """For benign inputs (no cancellation-heavy truncation), the bit-exact
+    skewed datapath agrees with the XLA bf16→f32 dot to fp32 roundoff."""
+    a, w = _bf16_pair(16, 32, 16, scale=0.5)
+    y_emu = np.asarray(ops.skewed_datapath_matmul(jnp.asarray(a), jnp.asarray(w)))
+    y_mxu = np.asarray(jnp.matmul(jnp.asarray(a), jnp.asarray(w),
+                                  preferred_element_type=jnp.float32))
+    np.testing.assert_allclose(y_emu, y_mxu, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# quantize kernel vs fpformats oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", ["fp8_e4m3", "fp8_e5m2"])
+def test_quantize_kernel(fmt):
+    x = RNG.standard_normal((73, 19)).astype(np.float32) * 300
+    scale = ops.amax_scale(jnp.asarray(x), fmt)
+    y = ops.quantize_fp8(jnp.asarray(x), scale, fmt, interpret=True)
+    y_ref = ref.quantize_ref(jnp.asarray(x), fmt, scale)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+def test_fp8_gemm_end_to_end():
+    a, w = _bf16_pair(64, 64, 64)
+    y8 = ops.sa_matmul_fp8(jnp.asarray(a), jnp.asarray(w))
+    y_ref = jnp.matmul(jnp.asarray(a), jnp.asarray(w),
+                       preferred_element_type=jnp.float32)
+    rel = float(jnp.linalg.norm(y8 - y_ref) / jnp.linalg.norm(y_ref))
+    assert rel < 0.06     # e4m3: 3 mantissa bits ⇒ few-percent GEMM error

@@ -1,0 +1,182 @@
+"""Layer-level references: flash attention, RoPE, MoE router, Mamba2 SSD."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PrecisionPolicy, use_policy
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.config import ArchConfig
+
+FP32 = PrecisionPolicy(input_format="fp32")
+
+
+def naive_attention(q, k, v, causal=True, window=0, cap=0.0):
+    B, T, H, hd = q.shape
+    S, KVH = k.shape[1], k.shape[2]
+    g = H // KVH
+    qg = q.reshape(B, T, KVH, g, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) * hd ** -0.5
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    qp, kp = jnp.arange(T), jnp.arange(S)
+    ok = jnp.ones((T, S), bool)
+    if causal:
+        ok &= qp[:, None] >= kp[None, :]
+    if window:
+        ok &= qp[:, None] - kp[None, :] < window
+    s = jnp.where(ok[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v).reshape(B, T, H, hd)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(), dict(window=5), dict(cap=3.0), dict(causal=False),
+    dict(cap=3.0, window=7)],
+    ids=["causal", "window", "softcap", "bidir", "cap+win"])
+def test_flash_vs_naive(kw):
+    with use_policy(FP32):
+        ks = jax.random.split(jax.random.key(0), 3)
+        q = jax.random.normal(ks[0], (2, 16, 4, 8))
+        k = jax.random.normal(ks[1], (2, 16, 2, 8))
+        v = jax.random.normal(ks[2], (2, 16, 2, 8))
+        out = L.blockwise_attention(q, k, v, block_q=4, block_kv=8, **kw)
+        want = naive_attention(q, k, v, **kw)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+        # gradients through the custom VJP
+        g1 = jax.grad(lambda q: jnp.sum(jnp.sin(
+            L.blockwise_attention(q, k, v, block_q=4, block_kv=8, **kw))))(q)
+        g2 = jax.grad(lambda q: jnp.sum(jnp.sin(
+            naive_attention(q, k, v, **kw))))(q)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=3e-5, atol=3e-5)
+
+
+def test_flash_kv_grads():
+    with use_policy(FP32):
+        ks = jax.random.split(jax.random.key(1), 3)
+        q = jax.random.normal(ks[0], (1, 8, 2, 4))
+        k = jax.random.normal(ks[1], (1, 8, 2, 4))
+        v = jax.random.normal(ks[2], (1, 8, 2, 4))
+        for argnum in (1, 2):
+            g1 = jax.grad(lambda *a: jnp.sum(jnp.cos(L.blockwise_attention(
+                *a, block_q=4, block_kv=4))), argnums=argnum)(q, k, v)
+            g2 = jax.grad(lambda *a: jnp.sum(jnp.cos(
+                naive_attention(*a))), argnums=argnum)(q, k, v)
+            np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                       rtol=3e-5, atol=3e-5)
+
+
+def test_rope_rotation_properties():
+    x = jax.random.normal(jax.random.key(0), (1, 1, 6, 8))
+    pos0 = jnp.zeros((1, 1), jnp.int32)
+    # position 0 is the identity
+    np.testing.assert_allclose(
+        np.asarray(L.apply_rope(x.transpose(0, 2, 1, 3), pos0[:, None],
+                                10000.0).transpose(0, 2, 1, 3)),
+        np.asarray(x), rtol=1e-6)
+    # norms preserved (rotation)
+    posn = jnp.full((1, 1), 77, jnp.int32)
+    y = L.apply_rope(x.transpose(0, 2, 1, 3), posn[:, None], 10000.0)
+    np.testing.assert_allclose(float(jnp.linalg.norm(y)),
+                               float(jnp.linalg.norm(x)), rtol=1e-5)
+    # relative property: <rope(q,m), rope(k,n)> depends only on m−n
+    q = jax.random.normal(jax.random.key(1), (1, 1, 1, 8))
+    k = jax.random.normal(jax.random.key(2), (1, 1, 1, 8))
+    def dot_at(m, n):
+        qm = L.apply_rope(q, jnp.full((1, 1, 1), m), 10000.0)
+        kn = L.apply_rope(k, jnp.full((1, 1, 1), n), 10000.0)
+        return float(jnp.sum(qm * kn))
+    assert dot_at(5, 3) == pytest.approx(dot_at(105, 103), rel=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 4))
+def test_router_properties(seed, k):
+    E = 8
+    cfg = type("C", (), {"num_experts": E, "experts_per_token": k})
+    x = jax.random.normal(jax.random.key(seed), (2, 6, 16))
+    w = jax.random.normal(jax.random.key(seed + 1), (16, E)) * 0.1
+    combine, aux = MOE.router(x, w, k)
+    c = np.asarray(combine)
+    # top-k weights renormalize to 1 per token; exactly k nonzero
+    np.testing.assert_allclose(c.sum(-1), 1.0, rtol=1e-5)
+    assert ((c > 0).sum(-1) == k).all()
+    assert float(aux["load_balance"]) > 0.9   # ≈1 near-uniform, grows with skew
+    assert np.isfinite(float(aux["router_z"]))
+
+
+def test_moe_ffn_matches_dense_single_expert():
+    """E=1, top-1: MoE must equal the plain SwiGLU FFN exactly."""
+    with use_policy(FP32):
+        cfg = ArchConfig(name="t", family="moe", num_layers=1, d_model=16,
+                         num_heads=2, num_kv_heads=1, d_ff=32, vocab_size=64,
+                         num_experts=1, experts_per_token=1)
+        ks = jax.random.split(jax.random.key(0), 4)
+        x = jax.random.normal(ks[0], (2, 8, 16))
+        p = {"router": jnp.zeros((16, 1)),
+             "wg": jax.random.normal(ks[1], (1, 16, 32)) * 0.1,
+             "wu": jax.random.normal(ks[2], (1, 16, 32)) * 0.1,
+             "wd": jax.random.normal(ks[3], (1, 32, 16)) * 0.1}
+        y, _ = MOE.moe_ffn(x, p, cfg, capacity_factor=1.0)
+        want = L.ffn_swiglu(x, {"wg": p["wg"][0], "wu": p["wu"][0],
+                                "wd": p["wd"][0]})
+        np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_ssd_chunked_vs_naive_recurrence():
+    """SSD chunked scan ≡ the token-by-token linear recurrence."""
+    with use_policy(FP32):
+        B, T, H, P, N = 2, 16, 3, 4, 5
+        ks = jax.random.split(jax.random.key(0), 5)
+        x = jax.random.normal(ks[0], (B, T, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+        B_ = jax.random.normal(ks[3], (B, T, N))
+        C_ = jax.random.normal(ks[4], (B, T, N))
+        y, S_fin = SSM.ssd_chunked(x, dt, A, B_, C_, chunk=4)
+        # reference: S_t = exp(dt_t A) S_{t-1} + dt_t x_t B_tᵀ; y_t = C_t·S_t
+        S = np.zeros((B, H, P, N))
+        ys = []
+        for t in range(T):
+            dA = np.exp(np.asarray(dt[:, t]) * np.asarray(A))  # (B, H)
+            S = S * dA[..., None, None] + \
+                (np.asarray(dt[:, t])[..., None] * np.asarray(x[:, t]))[..., None] \
+                * np.asarray(B_[:, t])[:, None, None, :]
+            ys.append(np.einsum("bn,bhpn->bhp", np.asarray(C_[:, t]), S))
+        want = np.stack(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y), want, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(S_fin), S, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_decode_step_matches_chunked():
+    with use_policy(FP32):
+        B, T, H, P, N = 1, 8, 2, 4, 3
+        ks = jax.random.split(jax.random.key(1), 5)
+        x = jax.random.normal(ks[0], (B, T, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+        B_ = jax.random.normal(ks[3], (B, T, N))
+        C_ = jax.random.normal(ks[4], (B, T, N))
+        y_full, _ = SSM.ssd_chunked(x, dt, A, B_, C_, chunk=4)
+        S = jnp.zeros((B, H, P, N))
+        for t in range(T):
+            S, y_t = SSM.ssd_decode_step(S, x[:, t], dt[:, t], A,
+                                         B_[:, t], C_[:, t])
+            np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_full[:, t]),
+                                       rtol=2e-4, atol=2e-4)
+
+
+def test_softcap_and_norms():
+    x = jnp.asarray([[1.0, -2.0, 3.0]])
+    assert float(L.softcap(x, 0.0)[0, 0]) == 1.0          # cap=0 disables
+    assert abs(abs(float(L.softcap(x * 100, 30.0)[0, 2])) - 30.0) < 0.5
+    w = jnp.ones((3,))
+    y = L.rmsnorm(x, w)
+    np.testing.assert_allclose(
+        float(jnp.sqrt(jnp.mean(y.astype(jnp.float32) ** 2))), 1.0, rtol=1e-4)

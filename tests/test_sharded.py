@@ -1,0 +1,83 @@
+"""Distribution correctness on a multi-device host mesh.
+
+Runs in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8
+so the main pytest process keeps seeing 1 device (required: smoke tests and
+benches must not inherit the fake-device setting)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.configs import reduced_config
+from repro.parallel import sharding as S
+from repro.parallel.compression import compressed_psum
+from repro.train.optimizer import AdamW, constant_lr
+from repro.train.step import make_train_step
+from repro.train.train_state import TrainState, init_state
+
+assert len(jax.devices()) == 8
+cfg = reduced_config("gemma2-9b")
+opt = AdamW(schedule=constant_lr(1e-3))
+step = make_train_step(cfg, opt, accum_steps=2)
+toks = jax.random.randint(jax.random.key(1), (8, 32), 0, cfg.vocab_size)
+batch = {"tokens": toks, "labels": toks}
+
+# single-device reference
+state0 = init_state(jax.random.key(0), cfg, opt)
+_, m_ref = jax.jit(step)(state0, batch)
+
+# 4x2 (data, model) mesh
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+S.set_active_mesh(mesh)
+state = init_state(jax.random.key(0), cfg, opt)
+pshard = S.param_shardings(cfg, state.params, mesh)
+repl = NamedSharding(mesh, P())
+sshard = TrainState(step=repl, params=pshard,
+                    opt_state=type(state.opt_state)(count=repl, mu=pshard, nu=pshard))
+state = jax.device_put(state, sshard)
+dshard = {k: NamedSharding(mesh, S.data_specs(mesh, v.shape)) for k, v in batch.items()}
+batch_s = jax.device_put(batch, dshard)
+with mesh:
+    state2, m = jax.jit(step, in_shardings=(sshard, dshard),
+                        out_shardings=(sshard, None))(state, batch_s)
+
+# sharded == unsharded (same math, different layout)
+ok_loss = abs(float(m["loss"]) - float(m_ref["loss"])) < 5e-3
+
+# shard_map compressed gradient psum across the data axis
+from jax.experimental.shard_map import shard_map
+g_local = jnp.arange(32, dtype=jnp.float32).reshape(4, 8) * 0.01
+def sync(g):
+    summed, resid = compressed_psum({"g": g}, "data", codec="int8")
+    return summed["g"], resid["g"]
+f = shard_map(sync, mesh=mesh, in_specs=P("data", None),
+              out_specs=(P("data", None), P("data", None)))
+summed, resid = f(g_local)
+true = np.tile(np.asarray(g_local).reshape(4, 1, 8).sum(0), (4, 1))
+err = np.abs(np.asarray(summed) - true).max()
+ok_comp = err < 0.05
+
+print(json.dumps({"ok_loss": ok_loss, "loss": float(m["loss"]),
+                  "loss_ref": float(m_ref["loss"]), "ok_comp": bool(ok_comp),
+                  "comp_err": float(err)}))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_train_step_and_compressed_psum():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["ok_loss"], res
+    assert res["ok_comp"], res

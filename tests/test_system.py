@@ -1,0 +1,92 @@
+"""End-to-end behaviour: training reduces loss; preemption checkpoint+resume
+reproduces uninterrupted training; the precision policy plumbs end-to-end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core import PrecisionPolicy, use_policy
+from repro.data.pipeline import SyntheticLM
+from repro.train import checkpoint as CKPT
+from repro.train.optimizer import AdamW, constant_lr
+from repro.train.step import make_train_step
+from repro.train.train_state import init_state
+
+
+def _run(cfg, steps, state, data, step_fn):
+    losses = []
+    jstep = jax.jit(step_fn)
+    for i in range(int(state.step), steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+        state, m = jstep(state, batch)
+        losses.append(float(m["loss"]))
+    return state, losses
+
+
+def test_training_reduces_loss():
+    cfg = reduced_config("qwen2.5-14b")
+    opt = AdamW(schedule=constant_lr(3e-3), weight_decay=0.0)
+    step_fn = make_train_step(cfg, opt)
+    data = SyntheticLM(cfg.vocab_size, 32, 8, seed=0)
+    state = init_state(jax.random.key(0), cfg, opt)
+    _, losses = _run(cfg, 25, state, data, step_fn)
+    # synthetic uniform tokens: loss should drop toward log(V) from above
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.05
+    assert all(np.isfinite(losses))
+
+
+def test_preempt_checkpoint_resume_bitexact(tmp_path):
+    """Train 6 steps straight vs 3 + checkpoint + restore + 3: identical."""
+    cfg = reduced_config("granite-moe-3b-a800m")
+    opt = AdamW(schedule=constant_lr(1e-3))
+    step_fn = make_train_step(cfg, opt)
+    data = SyntheticLM(cfg.vocab_size, 16, 4, seed=1)
+
+    state_a = init_state(jax.random.key(0), cfg, opt)
+    state_a, losses_a = _run(cfg, 6, state_a, data, step_fn)
+
+    state_b = init_state(jax.random.key(0), cfg, opt)
+    state_b, _ = _run(cfg, 3, state_b, data, step_fn)
+    CKPT.save(str(tmp_path), 3, state_b)
+    restored, _, start = CKPT.restore(str(tmp_path), state_b)
+    assert start == 3
+    state_b, losses_b = _run(cfg, 6, restored, data, step_fn)
+
+    for a, b in zip(jax.tree.leaves(state_a.params),
+                    jax.tree.leaves(state_b.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_precision_policy_changes_arithmetic():
+    """fp8 vs bf16 vs fp32 policies give measurably different logits —
+    the paper's datapath is live in the full model, not a no-op flag."""
+    cfg = reduced_config("phi3-medium-14b")
+    from repro.models import model as M
+    params = M.init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (1, 16), 0, cfg.vocab_size)
+
+    outs = {}
+    for fmt in ("fp32", "bf16", "fp8_e4m3"):
+        with use_policy(PrecisionPolicy(input_format=fmt)):
+            logits, _, _ = M.forward(params, cfg, toks)
+            outs[fmt] = np.asarray(logits[..., :cfg.vocab_size])
+    d_bf = np.abs(outs["bf16"] - outs["fp32"]).max()
+    d_f8 = np.abs(outs["fp8_e4m3"] - outs["fp32"]).max()
+    assert 0 < d_bf < d_f8          # precision ladder orders correctly
+    # all close in distribution: top-1 token mostly agrees bf16 vs fp32
+    agree = (outs["bf16"].argmax(-1) == outs["fp32"].argmax(-1)).mean()
+    assert agree > 0.8
+
+
+def test_emulate_backend_matches_xla_exactly_small():
+    """The bit-exact SA emulation == XLA bf16 dot on a real GEMM."""
+    from repro.core import sa_dot
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((16, 32)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((32, 8)).astype(np.float32))
+    with use_policy(PrecisionPolicy(backend="emulate")):
+        y_emu = sa_dot(a, w)
+    y_xla = sa_dot(a, w)
+    np.testing.assert_allclose(np.asarray(y_emu), np.asarray(y_xla),
+                               rtol=2e-7, atol=2e-7)

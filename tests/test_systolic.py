@@ -1,0 +1,100 @@
+"""Cycle model of the SA (paper §II–IV): latency algebra + headline claims."""
+import math
+
+import pytest
+
+from repro.core import energy as E
+from repro.core import workloads as wl
+from repro.core.systolic import (BASELINE, SKEWED, SAConfig, gemm_latency,
+                                 speedup, tile_latency, utilization)
+
+
+def test_tile_latency_formulas():
+    # baseline: 2 cycles per row of the reduction chain (Fig. 4)
+    assert tile_latency(M=1, r_used=128, c_used=1, pipeline=BASELINE) \
+        == 2 * 128 + 0 + 1 + 1
+    # skewed: 1 cycle per row + extra trailing add stage (Fig. 6)
+    assert tile_latency(M=1, r_used=128, c_used=1, pipeline=SKEWED) \
+        == 128 + 0 + 1 + 2
+
+
+def test_skew_saves_r_cycles_per_tile():
+    for r in (1, 16, 128):
+        d = tile_latency(10, r, 8, BASELINE) - tile_latency(10, r, 8, SKEWED)
+        assert d == r - 1    # 2R − R minus the extra add stage
+
+
+def test_latency_monotone_in_everything():
+    sa = SAConfig(pipeline=BASELINE)
+    base = gemm_latency(64, 256, 256, sa)
+    assert gemm_latency(128, 256, 256, sa) > base
+    assert gemm_latency(64, 512, 256, sa) > base
+    assert gemm_latency(64, 256, 512, sa) > base
+
+
+def test_streaming_bound_large_M():
+    """For M ≫ fill, both pipelines converge to ~M cycles/tile (speedup→1)."""
+    assert speedup(100_000, 128, 128) == pytest.approx(1.0, abs=0.01)
+    # latency-bound regime: small M ⇒ fill dominates; with the exposed
+    # initial weight load + column stagger the model gives ~1.33
+    assert speedup(1, 128, 128) > 1.3
+
+
+def test_utilization_bounds():
+    sa = SAConfig()
+    u = utilization(4096, 128, 128, sa)
+    assert 0.9 < u <= 1.0
+    assert utilization(1, 1, 1, sa) < 0.01
+
+
+def test_gemm_tiling_counts():
+    sa = SAConfig(rows=128, cols=128, pipeline=BASELINE)
+    one = gemm_latency(16, 128, 128, sa)
+    four = gemm_latency(16, 256, 256, sa)
+    # 4 tiles ≈ 4× one-tile compute (+ the shared initial weight load)
+    assert abs(four - (4 * (one - 128) + 128)) <= 1
+
+
+# ----------------------------------------------------------------------
+# Paper §IV headline claims (tolerances documented in EXPERIMENTS.md)
+# ----------------------------------------------------------------------
+
+def test_paper_headline_mobilenet():
+    t = E.network_totals("mobilenet")
+    assert abs(t["latency_saving"] - 0.16) < 0.04   # paper: 16 %
+    assert abs(t["energy_saving"] - 0.08) < 0.04    # paper: 8 %
+
+
+def test_paper_headline_resnet50():
+    t = E.network_totals("resnet50")
+    assert abs(t["latency_saving"] - 0.21) < 0.04   # paper: 21 %
+    assert abs(t["energy_saving"] - 0.11) < 0.04    # paper: 11 %
+
+
+def test_paper_area_power_constants():
+    assert E.REL_AREA[SKEWED] == 1.09               # paper: +9 % area
+    assert E.REL_POWER[SKEWED] == 1.07              # paper: +7 % power
+    skew = SAConfig(pipeline=SKEWED)
+    base = SAConfig(pipeline=BASELINE)
+    assert E.array_area_mm2(skew) / E.array_area_mm2(base) \
+        == pytest.approx(1.09)
+
+
+def test_per_layer_energy_crossover():
+    """Figs. 7/8: early layers (huge M) lose energy, late layers win big."""
+    reps = E.network_report("mobilenet")
+    pw = [r for r in reps if r.layer.startswith("pw")]
+    assert pw[0].energy_saving < 0.02               # early: ≈ no win / loss
+    assert pw[-1].energy_saving > 0.15              # late: big win
+    assert pw[-1].latency_saving > 0.25
+
+
+def test_workload_shapes():
+    mb = wl.mobilenet_v1()
+    rn = wl.resnet50()
+    assert len(mb) == 1 + 13 * 2 + 1
+    assert len(rn) == 1 + (3 + 4 + 6 + 3) * 3 + 4 + 1
+    macs = sum(wl.layer_macs(l) for l in mb)
+    assert 0.5e9 < macs < 0.64e9     # MobileNetV1 ≈ 0.57 GMACs
+    macs_rn = sum(wl.layer_macs(l) for l in rn)
+    assert 3.5e9 < macs_rn < 4.3e9   # ResNet50 ≈ 3.8–4.1 GMACs

@@ -1,0 +1,206 @@
+"""Optimizer vs numpy reference, checkpoint roundtrip/reshard, compression,
+data pipeline, fault handling."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import MemmapTokens, Prefetcher, SyntheticLM
+from repro.parallel import compression as C
+from repro.train import checkpoint as CKPT
+from repro.train.fault import StragglerWatchdog
+from repro.train.optimizer import AdamW, constant_lr, warmup_cosine
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+def _np_adamw_step(p, g, m, v, t, lr, b1, b2, eps, wd, clip):
+    gn = np.sqrt(sum((gi ** 2).sum() for gi in g.values()))
+    scale = min(1.0, clip / max(gn, 1e-12))
+    g = {k: gi * scale for k, gi in g.items()}
+    out_p, out_m, out_v = {}, {}, {}
+    for k in p:
+        out_m[k] = b1 * m[k] + (1 - b1) * g[k]
+        out_v[k] = b2 * v[k] + (1 - b2) * g[k] ** 2
+        mh = out_m[k] / (1 - b1 ** t)
+        vh = out_v[k] / (1 - b2 ** t)
+        out_p[k] = p[k] - lr * (mh / (np.sqrt(vh) + eps) + wd * p[k])
+    return out_p, out_m, out_v
+
+
+def test_adamw_matches_numpy_reference():
+    rng = np.random.default_rng(0)
+    p = {"a": rng.standard_normal((4, 3)).astype(np.float32),
+         "b": rng.standard_normal((7,)).astype(np.float32)}
+    opt = AdamW(schedule=constant_lr(1e-2), b1=0.9, b2=0.95, eps=1e-8,
+                weight_decay=0.1, clip_norm=1.0)
+    state = opt.init(p)
+    pj = jax.tree.map(jnp.asarray, p)
+    m = {k: np.zeros_like(v) for k, v in p.items()}
+    v = {k: np.zeros_like(vv) for k, vv in p.items()}
+    for t in range(1, 4):
+        g = {k: rng.standard_normal(vv.shape).astype(np.float32) * (t * 0.3)
+             for k, vv in p.items()}
+        pj, state, _ = opt.update(jax.tree.map(jnp.asarray, g), state, pj)
+        p, m, v = _np_adamw_step(p, g, m, v, t, 1e-2, 0.9, 0.95, 1e-8, 0.1, 1.0)
+        for k in p:
+            np.testing.assert_allclose(np.asarray(pj[k]), p[k], rtol=2e-5,
+                                       atol=2e-6)
+
+
+def test_warmup_cosine_schedule():
+    s = warmup_cosine(1.0, 10, 100, final_frac=0.1)
+    assert float(s(0)) == 0.0
+    assert float(s(10)) == pytest.approx(1.0, rel=1e-5)
+    assert float(s(5)) == pytest.approx(0.5, rel=1e-5)
+    assert float(s(100)) == pytest.approx(0.1, rel=1e-4)
+    assert float(s(55)) > float(s(90))
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,), jnp.bfloat16)},
+            "step": jnp.int32(7)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    CKPT.save(str(tmp_path), 3, t, extra={"note": "x"})
+    restored, extra, step = CKPT.restore(str(tmp_path), t)
+    assert step == 3 and extra == {"note": "x"}
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_latest_pointer_and_multiple_steps(tmp_path):
+    t = _tree()
+    CKPT.save(str(tmp_path), 1, t)
+    CKPT.save(str(tmp_path), 5, t)
+    assert CKPT.latest_step(str(tmp_path)) == 5
+    _, _, step = CKPT.restore(str(tmp_path), t, step=1)
+    assert step == 1
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    t = _tree()
+    d = CKPT.save(str(tmp_path), 2, t)
+    victim = os.path.join(d, "arr_00000.npy")
+    raw = bytearray(open(victim, "rb").read())
+    raw[-1] ^= 0xFF
+    open(victim, "wb").write(bytes(raw))
+    with pytest.raises(IOError, match="corruption"):
+        CKPT.restore(str(tmp_path), t)
+
+
+def test_checkpoint_reshard_on_load(tmp_path):
+    """Elastic restart: restore onto a different mesh layout."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    t = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    CKPT.save(str(tmp_path), 1, t)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    restored, _, _ = CKPT.restore(str(tmp_path), t, shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(t["w"]))
+
+
+def test_async_saver(tmp_path):
+    t = _tree()
+    saver = CKPT.AsyncSaver()
+    saver.save_async(str(tmp_path), 9, t)
+    saver.wait()
+    assert CKPT.latest_step(str(tmp_path)) == 9
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec", ["bf16", "int8"])
+def test_compression_roundtrip_error_bounded(codec):
+    rng = np.random.default_rng(0)
+    g = {"a": jnp.asarray(rng.standard_normal((32, 8)).astype(np.float32)),
+         "b": jnp.asarray(rng.standard_normal((5,)).astype(np.float32))}
+    payload, resid = C.compress_tree(g, codec)
+    back = C.decompress_tree(payload, codec)
+    for k in g:
+        err = np.abs(np.asarray(back[k]) - np.asarray(g[k]))
+        scale = np.abs(np.asarray(g[k])).max()
+        bound = scale * (2 ** -8 if codec == "bf16" else 1 / 127)
+        assert err.max() <= bound * 1.01
+        # residual is exactly the quantization error
+        np.testing.assert_allclose(np.asarray(resid[k]),
+                                   np.asarray(g[k]) - np.asarray(back[k]),
+                                   atol=1e-7)
+
+
+def test_error_feedback_unbiased_over_time():
+    """With error feedback, the accumulated applied update converges to the
+    accumulated true gradient (residual stays bounded)."""
+    rng = np.random.default_rng(1)
+    true_sum = np.zeros(64, np.float32)
+    applied_sum = np.zeros(64, np.float32)
+    resid = jnp.zeros(64)
+    for _ in range(50):
+        g = rng.standard_normal(64).astype(np.float32) * 0.1
+        true_sum += g
+        gj = jnp.asarray(g) + resid
+        q, scale = C.quantize_int8(gj)
+        back = C.dequantize_int8(q, scale)
+        resid = gj - back
+        applied_sum += np.asarray(back)
+    # residual bounded by one quantization step, not growing
+    assert np.abs(applied_sum - true_sum).max() \
+        <= float(jnp.abs(resid).max()) + 1e-5
+    assert float(jnp.abs(resid).max()) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline & fault handling
+# ---------------------------------------------------------------------------
+
+def test_synthetic_deterministic_and_host_disjoint():
+    d = SyntheticLM(1000, 16, 4, seed=3)
+    b1, b2 = d.batch_at(5, host=0), d.batch_at(5, host=0)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = d.batch_at(5, host=1)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_memmap_pipeline(tmp_path):
+    path = str(tmp_path / "toks.bin")
+    np.arange(10_000, dtype=np.int32).tofile(path)
+    d = MemmapTokens(path, seq_len=32, batch_per_host=2, n_hosts=2, host=1)
+    b = d.batch_at(0)
+    assert b["tokens"].shape == (2, 32)
+    np.testing.assert_array_equal(b["labels"], b["tokens"] + 1)  # arange data
+    d0 = MemmapTokens(path, seq_len=32, batch_per_host=2, n_hosts=2, host=0)
+    assert not np.array_equal(d0.batch_at(0)["tokens"], b["tokens"])
+
+
+def test_prefetcher_yields_in_order():
+    it = Prefetcher(iter([{"x": np.full(2, i)} for i in range(5)]), depth=2)
+    got = [int(b["x"][0]) for b in it]
+    assert got == list(range(5))
+
+
+def test_straggler_watchdog_flags_slow_steps():
+    events = []
+    w = StragglerWatchdog(threshold=2.0, on_straggler=lambda *a: events.append(a))
+    import time
+    for i in range(8):
+        w.step_start()
+        time.sleep(0.012 if i == 6 else 0.001)
+        w.step_end(i)
+    assert len(w.events) >= 1 and w.events[0][0] == 6
+    assert events == w.events

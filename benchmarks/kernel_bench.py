@@ -1,5 +1,7 @@
 """Kernel micro-bench: sa_matmul (interpret) vs the jnp reference, the
-bit-exact fp_emu datapath kernel, and the fp8 quantize kernel.
+bit-exact fp_emu datapath kernel, the fp8 quantize kernel — plus the
+autotune sweep (tuned vs heuristic block shapes, persisted to the JSON
+cache) and an end-to-end backend A/B of `sa_dot` (xla vs pallas vs emulate).
 
 Wall times on this CPU container are interpret-mode numbers (the kernels
 target TPU); the point of the table is correctness overhead accounting and
@@ -14,7 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fpformats import BF16, quantize_np
-from repro.kernels import ops, ref
+from repro.core.precision import PrecisionPolicy, sa_dot
+from repro.kernels import autotune, ops, ref
 
 
 def _time(fn, *args, reps=3):
@@ -62,6 +65,60 @@ def rows():
     s = ops.amax_scale(x, "fp8_e4m3")
     us = _time(lambda x: ops.quantize_fp8(x, s, "fp8_e4m3", interpret=True), x)
     out.append({"table": "kernel", "name": "quantize_fp8_e4m3_262k",
+                "us_per_call": round(us, 1)})
+    out.extend(autotune_rows())
+    out.extend(backend_rows(rng))
+    return out
+
+
+def autotune_rows():
+    """Sweep block shapes per GEMM shape; the winners land in the JSON cache
+    (`autotune.cache_path()`), so later processes start tuned."""
+    from repro.core.precision import EXACT_CPU_CONTAINERS
+
+    # tune the dtype the sa_dot production path actually hands the kernel:
+    # f32 containers on CPU (EXACT_CPU_CONTAINERS), bf16 on TPU — otherwise
+    # the cache keys written here are never the ones sa_dot looks up
+    dtype = "float32" if EXACT_CPU_CONTAINERS else "bfloat16"
+    out = []
+    for m, k, n in ((256, 256, 256), (512, 1024, 512), (384, 256, 640)):
+        default = autotune.default_blocks(m, n, k)
+        best, table = autotune.tune(m, n, k, dtype=dtype, reps=2)
+        by_blocks = {tuple(r["blocks"]): r["us"] for r in table}
+        out.append({"table": "autotune", "name": f"sa_matmul_{m}x{k}x{n}",
+                    "default_blocks": "x".join(map(str, default)),
+                    "default_us": round(by_blocks.get(default, float("nan")), 1),
+                    "tuned_blocks": "x".join(map(str, best)),
+                    "tuned_us": round(table[0]["us"], 1),
+                    "candidates": len(table)})
+    out.append({"table": "autotune", "name": "cache",
+                "path": autotune.cache_path(),
+                "backend": autotune.backend_key()})
+    return out
+
+
+def backend_rows(rng):
+    """sa_dot A/B: one flag flips the whole stack between backends."""
+    out = []
+    m, k, n = 128, 256, 128
+    a = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    # timing and error describe the same op: the fused-silu sa_dot
+    ref_y = np.asarray(sa_dot(a, w, PrecisionPolicy(backend="xla"),
+                              act="silu"))
+    for backend in ("xla", "pallas"):
+        pol = PrecisionPolicy(backend=backend)
+        fn = jax.jit(lambda a, w: sa_dot(a, w, pol, act="silu"))
+        us = _time(fn, a, w)
+        err = float(np.max(np.abs(np.asarray(fn(a, w)) - ref_y)))
+        out.append({"table": "backend", "name": f"sa_dot_{backend}_{m}x{k}x{n}",
+                    "us_per_call": round(us, 1), "max_abs_err_vs_xla":
+                    f"{err:.2e}"})
+    # emulate: tiny shape (pure-python bit-exact model, O(MKN) in numpy)
+    ae, we = a[:16, :32], w[:32, :16]
+    pol = PrecisionPolicy(backend="emulate")
+    us = _time(lambda a, w: sa_dot(a, w, pol), ae, we)
+    out.append({"table": "backend", "name": "sa_dot_emulate_16x32x16",
                 "us_per_call": round(us, 1)})
     return out
 

@@ -20,6 +20,18 @@ A/B'd from the same tree. `REPRO_OPT=0` disables all.
                         probability tiles in HBM. Default on for TPU only
                         (interpret mode on CPU is correctness-grade, not
                         speed-grade); training keeps the custom-VJP jnp path.
+  fused_epilogue      — fuse bias add / activation into the GEMM epilogue
+                        (models/layers.py passes bias=/act= to sa_dot). On the
+                        pallas backend this runs inside the kernel's final K
+                        step before the single output rounding; on xla it is
+                        the same fp32 math before cast_out — so the flag is
+                        numerics-preserving under the default fp32 output
+                        format and A/B-s only the fusion, not the result.
+
+The GEMM backend itself (xla | pallas | emulate) is a string knob, not a
+bool flag: `gemm_backend()` reads REPRO_GEMM_BACKEND (default "xla") and
+seeds `core.precision.DEFAULT_POLICY`, so the whole stack — layers, train
+step, benchmarks — is A/B-able end-to-end from one environment variable.
 """
 from __future__ import annotations
 
@@ -33,6 +45,7 @@ FLAGS = {
     "pad_kv_heads": _ENABLED,
     "bf16_params_in_layers": _ENABLED,
     "pallas_attention": _ENABLED and jax.default_backend() == "tpu",
+    "fused_epilogue": _ENABLED,
     # REFUTED (kept for the record, default off): padding the expert dim at
     # trace time (granite 40→48) forces a per-layer-per-µstep reshard of the
     # F-sharded stored weights into the E-sharded compute layout — measured
@@ -49,3 +62,18 @@ def enabled(name: str) -> bool:
 
 def set_flag(name: str, value: bool):
     FLAGS[name] = value
+
+
+_GEMM_BACKENDS = ("xla", "pallas", "emulate")
+
+
+def gemm_backend() -> str:
+    """Process-default GEMM backend for `PrecisionPolicy` (reads
+    REPRO_GEMM_BACKEND at call time; `core.precision.current_policy`
+    consults this on every un-scoped call, so late env changes are
+    honored). Scoped overrides go through `core.precision.use_policy`."""
+    backend = os.environ.get("REPRO_GEMM_BACKEND", "xla")
+    if backend not in _GEMM_BACKENDS:
+        raise ValueError(
+            f"REPRO_GEMM_BACKEND={backend!r}; want one of {_GEMM_BACKENDS}")
+    return backend

@@ -88,11 +88,28 @@ class PrecisionPolicy:
         return quantize(y, fmt)
 
 
-DEFAULT_POLICY = PrecisionPolicy()
+# Default backend is A/B-able from one knob (core/optflags.py reads
+# REPRO_GEMM_BACKEND): xla ↔ pallas ↔ emulate without touching call sites.
+from .optflags import gemm_backend as _default_backend  # noqa: E402
+
+DEFAULT_POLICY = PrecisionPolicy(backend=_default_backend())
 _POLICY_STACK: list[PrecisionPolicy] = [DEFAULT_POLICY]
 
 
 def current_policy() -> PrecisionPolicy:
+    # the stack bottom tracks the REPRO_GEMM_BACKEND knob at call time, so
+    # env changes made after import are honored for calls that TRACE after
+    # the change (scoped use_policy overrides always win). An already-jitted
+    # callable keeps the backend it was traced with — A/B comparisons need a
+    # fresh jit wrapper per backend (see tests/test_precision_backends.py)
+    global DEFAULT_POLICY
+    if len(_POLICY_STACK) == 1:
+        backend = _default_backend()
+        if backend != _POLICY_STACK[0].backend:
+            # keep the module-level DEFAULT_POLICY accessor in sync (note:
+            # `from repro.core import DEFAULT_POLICY` captures a snapshot)
+            DEFAULT_POLICY = _POLICY_STACK[0] = PrecisionPolicy(
+                backend=backend)
     return _POLICY_STACK[-1]
 
 
@@ -122,22 +139,44 @@ def _emulated_dot(a: jax.Array, w: jax.Array, policy: PrecisionPolicy):
                              w.astype(jnp.float32))
 
 
+def _epilogue(y: jax.Array, bias, act: str) -> jax.Array:
+    """Reference epilogue on the fp32 chain (xla/emulate backends); the
+    pallas backend fuses the identical math into its final K step."""
+    from repro.kernels.sa_matmul import EPILOGUES, apply_act
+
+    if act not in EPILOGUES:
+        # same loud failure the pallas backend gives — a typo'd act must
+        # never silently skip the activation on one backend only
+        raise ValueError(f"unknown epilogue act {act!r}; have {EPILOGUES}")
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return apply_act(y, act)
+
+
 def sa_dot(a: jax.Array, w: jax.Array, policy: PrecisionPolicy | None = None,
-           precision=None) -> jax.Array:
-    """`a @ w` under the SA arithmetic contract. Batched `a` supported."""
+           precision=None, *, bias: jax.Array | None = None,
+           act: str = "none") -> jax.Array:
+    """`a @ w` under the SA arithmetic contract. Batched `a` supported.
+
+    `bias`/`act` are the fused epilogue: applied to the fp32 chain *before*
+    the single output rounding, on every backend (inside the kernel's final
+    K step on pallas; in fp32 before `cast_out` on xla/emulate).
+    """
     policy = policy or current_policy()
     a_q, w_q = policy.cast_in(a), policy.cast_in(w)
     if policy.backend == "emulate":
         if a.ndim != 2 or w.ndim != 2:
             raise ValueError("emulate backend supports 2-D GEMMs only")
-        return policy.cast_out(_emulated_dot(a_q, w_q, policy))
+        y = _emulated_dot(a_q, w_q, policy)
+        return policy.cast_out(_epilogue(y, bias, act))
     if policy.backend == "pallas" and a.ndim == 2 and w.ndim == 2:
         from repro.kernels.ops import sa_matmul  # lazy: avoid import cycle
 
-        return policy.cast_out(sa_matmul(a_q, w_q))
+        bias_f32 = None if bias is None else bias.astype(jnp.float32)
+        return policy.cast_out(sa_matmul(a_q, w_q, bias=bias_f32, act=act))
     # xla / fallback: MXU dot with fp32 accumulation, round once on output.
     y = jnp.matmul(a_q, w_q, preferred_element_type=jnp.float32)
-    return policy.cast_out(y)
+    return policy.cast_out(_epilogue(y, bias, act))
 
 
 def sa_einsum(spec: str, a: jax.Array, w: jax.Array,

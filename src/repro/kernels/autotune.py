@@ -1,0 +1,231 @@
+"""Block-shape autotuner for the SA GEMM (ArrayFlex-style configurability).
+
+Sweeps (bm, bn, bk) per (M, N, K, dtype, epilogue) workload and remembers the
+winner in two layers:
+
+  * an **in-process dict** (`_MEM`) consulted on every `lookup`, and
+  * an **on-disk JSON cache** so tuning results persist across processes
+    (default ``~/.cache/repro_sa/autotune.json``; override with
+    ``REPRO_AUTOTUNE_CACHE``).
+
+Entries are keyed by backend (``cpu-interpret`` on this container, ``tpu``
+on hardware) — interpret-mode timings never pollute hardware decisions.
+
+`lookup` is the cheap path used by `repro.kernels.ops.sa_matmul` on every
+call: memory cache → disk cache → MXU-aligned heuristic. It only *sweeps*
+when asked (``sweep=True`` or ``REPRO_AUTOTUNE=1``), so test/serving paths
+never pay tuning latency by surprise. A corrupt or unreadable cache file is
+ignored, never fatal.
+
+Cache format (DESIGN.md §2d)::
+
+    {"version": 1,
+     "entries": {"cpu-interpret|256x256x512|bfloat16|none":
+                 {"blocks": [256, 256, 512], "us": 812.4}}}
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import time
+
+try:
+    import fcntl
+except ImportError:  # pragma: no cover - non-posix
+    fcntl = None
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sa_matmul import clip_blocks, default_blocks, sa_matmul_pallas
+
+_VERSION = 1
+_MEM: dict[str, tuple[int, int, int]] = {}
+_DISK_LOADED = False
+
+# candidate (bm, bn, bk) shapes; clipped to the problem and deduped per
+# shape. All tile-aligned by construction (bm % 16, bn/bk % 128 == 0), so
+# the tile-rounded clip in candidates_for keeps every swept shape aligned.
+CANDIDATES = (
+    (64, 128, 128),
+    (128, 128, 256),
+    (128, 256, 512),
+    (256, 128, 512),
+    (256, 256, 512),
+    (512, 256, 512),
+    (256, 512, 1024),
+)
+
+
+def backend_key() -> str:
+    """Cache namespace: platform, plus '-interpret' off-TPU (interpret-mode
+    timings must never steer hardware block choices)."""
+    plat = jax.default_backend()
+    return plat if plat == "tpu" else f"{plat}-interpret"
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro_sa",
+                     "autotune.json"))
+
+
+def _key(m: int, n: int, k: int, dtype: str, epilogue: str) -> str:
+    return f"{backend_key()}|{m}x{n}x{k}|{dtype}|{epilogue}"
+
+
+def _read_disk() -> dict:
+    """Parse the on-disk cache; corrupt/missing files are just empty."""
+    try:
+        with open(cache_path()) as f:
+            data = json.load(f)
+        entries = data.get("entries", {})
+        if data.get("version") != _VERSION or not isinstance(entries, dict):
+            return {}
+        return entries
+    except (OSError, ValueError):
+        return {}
+
+
+def _load_disk_once():
+    global _DISK_LOADED
+    if _DISK_LOADED:
+        return
+    _DISK_LOADED = True
+    for key, ent in _read_disk().items():
+        try:
+            bm, bn, bk = (int(x) for x in ent["blocks"])
+            _MEM.setdefault(key, (bm, bn, bk))
+        except (KeyError, TypeError, ValueError):
+            continue
+
+
+@contextlib.contextmanager
+def _file_lock(path: str):
+    """flock-serialized critical section so concurrent tuners don't drop
+    each other's entries in the read-merge-write below (best-effort: no-op
+    where flock is unavailable)."""
+    if fcntl is None:
+        yield
+        return
+    with open(f"{path}.lock", "w") as lf:
+        fcntl.flock(lf, fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(lf, fcntl.LOCK_UN)
+
+
+def _write_disk(key: str, blocks: tuple[int, int, int], us: float):
+    """Merge one entry into the JSON cache (flock + tmp-rename atomic)."""
+    path = cache_path()
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with _file_lock(path):
+            entries = _read_disk()
+            entries[key] = {"blocks": list(blocks), "us": round(float(us), 2)}
+            tmp = f"{path}.tmp.{os.getpid()}"
+            with open(tmp, "w") as f:
+                json.dump({"version": _VERSION, "entries": entries}, f,
+                          indent=1)
+            os.replace(tmp, path)
+    except OSError:
+        pass  # read-only FS etc. — in-process cache still works
+
+
+def reset():
+    """Forget the in-process cache (tests: simulates a fresh process)."""
+    global _DISK_LOADED
+    _MEM.clear()
+    _DISK_LOADED = False
+
+
+def candidates_for(m: int, n: int, k: int) -> list[tuple[int, int, int]]:
+    seen, out = set(), []
+    for bm, bn, bk in CANDIDATES + (default_blocks(m, n, k),):
+        # same tile-aligned clipping the kernel applies, so cached entries
+        # record the blocks that actually run
+        c = clip_blocks(bm, bn, bk, m, n, k)
+        if c not in seen:
+            seen.add(c)
+            out.append(c)
+    return out
+
+
+def _time_blocks(m, n, k, dtype, epilogue, blocks, reps=3) -> float:
+    rng = np.random.default_rng(0)
+    dt = jnp.dtype(dtype)
+    a = jnp.asarray(rng.standard_normal((m, k)), dt)
+    w = jnp.asarray(rng.standard_normal((k, n)), dt)
+    bias = jnp.zeros((n,), jnp.float32) if epilogue != "none" else None
+    interpret = jax.default_backend() != "tpu"
+    bm, bn, bk = blocks
+
+    def run():
+        return sa_matmul_pallas(a, w, bias, act=epilogue, bm=bm, bn=bn,
+                                bk=bk, interpret=interpret)
+
+    run().block_until_ready()          # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = run()
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def tune(m: int, n: int, k: int, *, dtype: str = "bfloat16",
+         epilogue: str = "none", reps: int = 3
+         ) -> tuple[tuple[int, int, int], list[dict]]:
+    """Sweep candidate block shapes; cache and return the winner.
+
+    Returns (best_blocks, table) where table rows are
+    {"blocks": (bm,bn,bk), "us": float} sorted by time.
+    """
+    table = [{"blocks": c, "us": _time_blocks(m, n, k, dtype, epilogue, c,
+                                              reps=reps)}
+             for c in candidates_for(m, n, k)]
+    table.sort(key=lambda r: r["us"])
+    best = tuple(table[0]["blocks"])
+    key = _key(m, n, k, dtype, epilogue)
+    _MEM[key] = best
+    _write_disk(key, best, table[0]["us"])
+    return best, table
+
+
+def lookup(m: int, n: int, k: int, *, dtype: str = "bfloat16",
+           epilogue: str = "none", sweep: bool | None = None
+           ) -> tuple[int, int, int]:
+    """Best-known (bm, bn, bk): memory → disk → (optional sweep) → heuristic.
+
+    `sweep=None` defers to the ``REPRO_AUTOTUNE`` env var (default off), so
+    production callers hit at most one JSON read per process. A sweep
+    cannot run while an outer `jit` is tracing (the timing calls would
+    trace into the caller's computation instead of executing), so mid-trace
+    misses fall back to the heuristic — pre-seed the cache eagerly
+    (`tune()` / `benchmarks/kernel_bench.py`) to get tuned blocks inside
+    jitted steps.
+
+    A miss on an epilogue-specific key falls back to the bare-GEMM entry
+    for the same shape: the epilogue is O(M·N) elementwise against the
+    O(M·N·K) GEMM, so tuned blocks transfer — and the fused-activation FFN
+    paths benefit from a cache swept with ``epilogue="none"``.
+    """
+    _load_disk_once()
+    key = _key(m, n, k, dtype, epilogue)
+    hit = _MEM.get(key)
+    if hit is None and epilogue != "none":
+        hit = _MEM.get(_key(m, n, k, dtype, "none"))
+    if hit is not None:
+        return hit
+    if sweep is None:
+        sweep = os.environ.get("REPRO_AUTOTUNE", "0") not in ("0", "false",
+                                                              "off")
+    if sweep and jax.core.trace_state_clean():
+        return tune(m, n, k, dtype=dtype, epilogue=epilogue)[0]
+    # heuristic fallback — deliberately NOT memoized, so a later in-process
+    # sweep can still take over this key (the disk cache is only read once
+    # per process, so cross-process updates need a restart to be seen)
+    return default_blocks(m, n, k)

@@ -2,12 +2,18 @@
 
 On CPU (this container) the kernels execute in interpret mode; on TPU they
 compile to Mosaic. `INTERPRET` is resolved once from the backend.
+
+`sa_matmul` is the production GEMM path: differentiable (custom VJP through
+the same round-once kernel), fused-epilogue capable (bias/act/scale before
+the single output rounding), and block-shape autotuned via
+`repro.kernels.autotune` whenever the caller doesn't pin (bm, bn, bk).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from . import autotune
 from .sa_matmul import sa_matmul_pallas
 from .fp_emu import fma_emu_matmul
 from .quantize import quantize_fp8, amax_scale
@@ -23,22 +29,35 @@ def sa_attention(q, k, v, **kw):
     return _sa_attention(q, k, v, **kw)
 
 
-def sa_matmul(a: jax.Array, w: jax.Array, *, bm: int = 256, bn: int = 256,
-              bk: int = 512, out_dtype=jnp.float32) -> jax.Array:
-    """Production GEMM under the SA contract (see sa_matmul.py)."""
-    return sa_matmul_pallas(a, w, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
-                            interpret=INTERPRET)
+def sa_matmul(a: jax.Array, w: jax.Array, *, bias: jax.Array | None = None,
+              act: str = "none", scale=None, bm: int | None = None,
+              bn: int | None = None, bk: int | None = None,
+              out_dtype=jnp.float32) -> jax.Array:
+    """Production GEMM under the SA contract (see sa_matmul.py).
+
+    Unpinned block dims are resolved through the autotune cache (tuned entry
+    if one exists for this (M, N, K, dtype, epilogue), MXU heuristic
+    otherwise; set REPRO_AUTOTUNE=1 to sweep on miss).
+    """
+    m, k = a.shape
+    n = w.shape[1]
+    if bm is None or bn is None or bk is None:
+        tbm, tbn, tbk = autotune.lookup(m, n, k, dtype=str(a.dtype),
+                                        epilogue=act)
+        bm, bn, bk = bm or tbm, bn or tbn, bk or tbk
+    return sa_matmul_pallas(a, w, bias, scale, act=act, bm=bm, bn=bn, bk=bk,
+                            out_dtype=out_dtype, interpret=INTERPRET)
 
 
 def sa_matmul_fp8(a: jax.Array, w: jax.Array, fmt_name: str = "fp8_e4m3",
                   **kw) -> jax.Array:
-    """FP8 GEMM: per-tensor-scaled quantization kernels feeding the SA GEMM,
-    descaled on output (round-once preserved end-to-end)."""
+    """FP8 GEMM: per-tensor-scaled quantization kernels feeding the SA GEMM.
+    The descale (sa·sw) rides the fused epilogue — applied to the fp32 chain
+    *before* the single output rounding (round-once preserved end-to-end)."""
     sa_, sw = amax_scale(a, fmt_name), amax_scale(w, fmt_name)
     aq = quantize_fp8(a, sa_, fmt_name, interpret=INTERPRET).astype(jnp.bfloat16)
     wq = quantize_fp8(w, sw, fmt_name, interpret=INTERPRET).astype(jnp.bfloat16)
-    y = sa_matmul(aq, wq, **kw)
-    return y * (sa_ * sw)
+    return sa_matmul(aq, wq, scale=sa_ * sw, **kw)
 
 
 def skewed_datapath_matmul(a: jax.Array, w: jax.Array,
@@ -48,4 +67,5 @@ def skewed_datapath_matmul(a: jax.Array, w: jax.Array,
 
 
 __all__ = ["sa_matmul", "sa_matmul_fp8", "skewed_datapath_matmul",
-           "sa_attention", "quantize_fp8", "amax_scale", "INTERPRET"]
+           "sa_attention", "quantize_fp8", "amax_scale", "autotune",
+           "INTERPRET"]

@@ -1,0 +1,13 @@
+"""Compatibility shims for `jax.experimental.pallas.tpu` API renames."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# renamed across jax releases: TPUCompilerParams (≤0.4.x) → CompilerParams
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:  # pragma: no cover - depends on jax version
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; this jax version is unsupported by the Pallas "
+        "kernels (need jax>=0.4.30)")

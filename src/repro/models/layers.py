@@ -42,7 +42,17 @@ def norm_apply(x, p, kind="rmsnorm", eps=1e-6):
 
 
 def act_fn(x, kind="silu"):
-    return jax.nn.silu(x) if kind == "silu" else jax.nn.gelu(x)
+    # one activation table for fused and unfused paths: drift between the
+    # two would break the fused_epilogue flag's numerics-preserving A/B
+    from repro.kernels.sa_matmul import EPILOGUES, apply_act
+    if kind not in EPILOGUES or kind == "none":
+        raise ValueError(f"unknown activation {kind!r}")
+    return apply_act(x, kind)
+
+
+def _fuse_epilogue() -> bool:
+    from repro.core import optflags
+    return optflags.enabled("fused_epilogue")
 
 
 def softcap(x, cap: float):
@@ -297,10 +307,17 @@ class KVCache(NamedTuple):
 def qkv_project(x, p, cfg, meta):
     """x: (B, T, D) → q (B,T,H,hd), k/v (B,T,KVH,hd)."""
     B, T, _ = x.shape
-    q = sa_dot(x.reshape(B * T, -1), p["wq"]).reshape(B, T, cfg.num_heads, cfg.hd)
-    k = sa_dot(x.reshape(B * T, -1), p["wk"]).reshape(B, T, cfg.num_kv_heads, cfg.hd)
-    v = sa_dot(x.reshape(B * T, -1), p["wv"]).reshape(B, T, cfg.num_kv_heads, cfg.hd)
-    if cfg.qkv_bias:
+    xf = x.reshape(B * T, -1)
+    # fused: bias rides the GEMM epilogue — added to the fp32 chain before
+    # the single output rounding instead of to the already-rounded output
+    fused = cfg.qkv_bias and _fuse_epilogue()
+    q = sa_dot(xf, p["wq"], bias=p["bq"] if fused else None
+               ).reshape(B, T, cfg.num_heads, cfg.hd)
+    k = sa_dot(xf, p["wk"], bias=p["bk"] if fused else None
+               ).reshape(B, T, cfg.num_kv_heads, cfg.hd)
+    v = sa_dot(xf, p["wv"], bias=p["bv"] if fused else None
+               ).reshape(B, T, cfg.num_kv_heads, cfg.hd)
+    if cfg.qkv_bias and not fused:
         q = q + p["bq"].reshape(cfg.num_heads, cfg.hd)
         k = k + p["bk"].reshape(cfg.num_kv_heads, cfg.hd)
         v = v + p["bv"].reshape(cfg.num_kv_heads, cfg.hd)
@@ -437,11 +454,16 @@ def attention_block(x, p, cfg, meta, positions, cache: KVCache | None = None,
 def ffn_swiglu(x, p, act="silu"):
     B, T, D = x.shape
     xf = x.reshape(B * T, D)
-    h = act_fn(sa_dot(xf, p["wg"]), act) * sa_dot(xf, p["wu"])
+    if _fuse_epilogue():
+        h = sa_dot(xf, p["wg"], act=act) * sa_dot(xf, p["wu"])
+    else:
+        h = act_fn(sa_dot(xf, p["wg"]), act) * sa_dot(xf, p["wu"])
     return sa_dot(h, p["wd"]).reshape(B, T, D)
 
 
 def ffn_mlp(x, p, act="gelu"):
     B, T, D = x.shape
     xf = x.reshape(B * T, D)
+    if _fuse_epilogue():
+        return sa_dot(sa_dot(xf, p["w1"], act=act), p["w2"]).reshape(B, T, D)
     return sa_dot(act_fn(sa_dot(xf, p["w1"]), act), p["w2"]).reshape(B, T, D)

@@ -3,7 +3,7 @@ forwarding + retimed normalization is *exact* — bit-identical results to the
 baseline normalize-then-align pipeline, for every chain and format."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st  # hypothesis or skip-stub shim
 
 from repro.core import chained_fma as cf
 from repro.core.fpformats import BF16, FP8_E4M3, FP8_E5M2, FP16, get_format, \

@@ -1,7 +1,7 @@
 """Reduced-precision format descriptors + quantization properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import given, settings, st  # hypothesis or skip-stub shim
 
 from repro.core.fpformats import (BF16, FP8_E4M3, FP8_E5M2, FP16, FORMATS,
                                   compose, decompose, get_format, quantize_np)

@@ -1,12 +1,19 @@
-"""Cycle model of the SA (paper §II–IV): latency algebra + headline claims."""
+"""Cycle model of the SA (paper §II–IV): latency algebra + headline claims.
+
+The closed-form `tile_latency`/`gemm_latency` algebra is cross-checked
+against a brute-force per-PE event simulation (bottom of this file): every
+MAC is scheduled individually from its dependencies, so an off-by-one in the
+algebra cannot hide behind another formula."""
+import itertools
 import math
 
 import pytest
 
 from repro.core import energy as E
 from repro.core import workloads as wl
-from repro.core.systolic import (BASELINE, SKEWED, SAConfig, gemm_latency,
-                                 speedup, tile_latency, utilization)
+from repro.core.systolic import (BASELINE, CYCLES_PER_ROW, EXTRA_STAGES,
+                                 SKEWED, SAConfig, gemm_latency, speedup,
+                                 tile_latency, utilization)
 
 
 def test_tile_latency_formulas():
@@ -87,6 +94,93 @@ def test_per_layer_energy_crossover():
     assert pw[0].energy_saving < 0.02               # early: ≈ no win / loss
     assert pw[-1].energy_saving > 0.15              # late: big win
     assert pw[-1].latency_saving > 0.25
+
+
+# ----------------------------------------------------------------------
+# Brute-force cycle simulation vs the closed-form latency algebra
+# ----------------------------------------------------------------------
+
+def _simulate_tile(M: int, r_used: int, c_used: int, pipeline: str) -> int:
+    """Schedule every MAC of one resident weight tile individually.
+
+    Dependencies per PE (row rr, col cc) working on input row m:
+      * west input: the operand reaches column cc at cycle m + cc (one-cycle
+        west→east skew),
+      * the chain: the partial sum from PE rr−1 arrives CYCLES_PER_ROW after
+        that PE issued (2 for baseline — Fig. 4; 1 for skewed — Fig. 6),
+      * occupancy: a PE issues at most one MAC per cycle (II = 1).
+    The last result then drains the final PE's own pipeline plus the
+    column-end trailing stages (extra add for skewed, rounder for both).
+    Returns the total cycle count.
+    """
+    cpr = CYCLES_PER_ROW[pipeline]
+    done = 0
+    for cc in range(c_used):
+        prev_row_issue = [-10**9] * r_used     # last issue cycle per PE
+        for m in range(M):
+            t = m + cc                         # west input arrival
+            for rr in range(r_used):
+                t = max(t, prev_row_issue[rr] + 1)   # occupancy
+                prev_row_issue[rr] = t
+                t += cpr                       # chain hop to PE rr+1
+            # t is now when the column-end logic receives the partial sum;
+            # it spends EXTRA_STAGES cycles there, writing out in the last —
+            # so the cycle *count* is that final index + 1
+            finish = t + EXTRA_STAGES[pipeline]
+            done = max(done, finish + 1)
+    return done
+
+
+def _simulate_gemm(M: int, K: int, N: int, sa: SAConfig) -> int:
+    """Tile-by-tile timeline with explicit double-buffered weight loads.
+
+    Unlike `gemm_latency`, nothing assumes loads are hidden: the next tile's
+    load (r_used cycles through the north ports) starts with the current
+    tile's compute, and the next compute waits on max(compute_end, load_end).
+    """
+    if min(M, K, N) <= 0:
+        return 0
+    tiles = []
+    for ki in range(math.ceil(K / sa.rows)):
+        r_used = min(sa.rows, K - ki * sa.rows)
+        for ni in range(math.ceil(N / sa.cols)):
+            c_used = min(sa.cols, N - ni * sa.cols)
+            tiles.append((r_used, c_used))
+    t = tiles[0][0]                            # exposed initial weight load
+    for i, (r_used, c_used) in enumerate(tiles):
+        start = t
+        end = start + _simulate_tile(M, r_used, c_used, sa.pipeline)
+        if i + 1 < len(tiles):
+            load_end = start + tiles[i + 1][0]
+            end = max(end, load_end)
+        t = end
+    return t
+
+
+@pytest.mark.parametrize("pipeline", [BASELINE, SKEWED])
+def test_tile_latency_matches_cycle_simulation(pipeline):
+    for M, r, c in itertools.product((1, 2, 4, 9), (1, 2, 5, 8), (1, 3, 8)):
+        assert tile_latency(M, r, c, pipeline) \
+            == _simulate_tile(M, r, c, pipeline), (M, r, c, pipeline)
+
+
+@pytest.mark.parametrize("pipeline", [BASELINE, SKEWED])
+def test_gemm_latency_matches_cycle_simulation(pipeline):
+    """Small arrays, K/N not multiples of rows/cols ⇒ partial tiles
+    (r_used < rows) on the last K and N tile are exercised."""
+    sa = SAConfig(rows=8, cols=8, pipeline=pipeline)
+    for M, K, N in itertools.product((1, 5, 17), (3, 8, 20), (1, 6, 16)):
+        assert gemm_latency(M, K, N, sa) == _simulate_gemm(M, K, N, sa), \
+            (M, K, N, pipeline)
+
+
+@pytest.mark.parametrize("pipeline", [BASELINE, SKEWED])
+def test_partial_tile_edge(pipeline):
+    """r_used < rows: the fill shortens with the chain actually present."""
+    full = tile_latency(4, 8, 8, pipeline)
+    part = tile_latency(4, 3, 8, pipeline)
+    assert part == _simulate_tile(4, 3, 8, pipeline)
+    assert full - part == CYCLES_PER_ROW[pipeline] * 5
 
 
 def test_workload_shapes():

@@ -67,34 +67,46 @@ def rows():
     out.append({"table": "kernel", "name": "quantize_fp8_e4m3_262k",
                 "us_per_call": round(us, 1)})
     out.extend(autotune_rows())
+    out.extend(decode_rows())
     out.extend(backend_rows(rng))
     return out
+
+
+def _tuned_row(table, m, k, n, dtype):
+    """Sweep one GEMM shape; report tuned vs heuristic-default blocks."""
+    default = autotune.default_blocks(m, n, k)
+    best, sweep = autotune.tune(m, n, k, dtype=dtype, reps=2)
+    by_blocks = {tuple(r["blocks"]): r["us"] for r in sweep}
+    return {"table": table, "name": f"sa_matmul_{m}x{k}x{n}",
+            "default_blocks": "x".join(map(str, default)),
+            "default_us": round(by_blocks.get(default, float("nan")), 1),
+            "tuned_blocks": "x".join(map(str, best)),
+            "tuned_us": round(sweep[0]["us"], 1),
+            "candidates": len(sweep)}
 
 
 def autotune_rows():
     """Sweep block shapes per GEMM shape; the winners land in the JSON cache
     (`autotune.cache_path()`), so later processes start tuned."""
-    from repro.core.precision import EXACT_CPU_CONTAINERS
-
-    # tune the dtype the sa_dot production path actually hands the kernel:
-    # f32 containers on CPU (EXACT_CPU_CONTAINERS), bf16 on TPU — otherwise
-    # the cache keys written here are never the ones sa_dot looks up
-    dtype = "float32" if EXACT_CPU_CONTAINERS else "bfloat16"
-    out = []
-    for m, k, n in ((256, 256, 256), (512, 1024, 512), (384, 256, 640)):
-        default = autotune.default_blocks(m, n, k)
-        best, table = autotune.tune(m, n, k, dtype=dtype, reps=2)
-        by_blocks = {tuple(r["blocks"]): r["us"] for r in table}
-        out.append({"table": "autotune", "name": f"sa_matmul_{m}x{k}x{n}",
-                    "default_blocks": "x".join(map(str, default)),
-                    "default_us": round(by_blocks.get(default, float("nan")), 1),
-                    "tuned_blocks": "x".join(map(str, best)),
-                    "tuned_us": round(table[0]["us"], 1),
-                    "candidates": len(table)})
+    dtype = autotune.production_dtype()
+    out = [_tuned_row("autotune", m, k, n, dtype)
+           for m, k, n in ((256, 256, 256), (512, 1024, 512),
+                           (384, 256, 640))]
     out.append({"table": "autotune", "name": "cache",
                 "path": autotune.cache_path(),
                 "backend": autotune.backend_key()})
     return out
+
+
+def decode_rows():
+    """Decode-shape GEMVs (M ∈ {1, 4, 8}): the per-token serving regime.
+
+    `clip_blocks` rounds these M up to one 16-sublane tile, so the sweep is
+    over the (bn, bk) tiling (autotune's DECODE_CANDIDATES); winners land in
+    the same JSON cache the engine's decode step reads."""
+    dtype = autotune.production_dtype()
+    n, k = 512, 256
+    return [_tuned_row("decode", m, k, n, dtype) for m in (1, 4, 8)]
 
 
 def backend_rows(rng):

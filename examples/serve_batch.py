@@ -1,46 +1,42 @@
-"""End-to-end serving driver: batched requests through the decode engine.
+"""End-to-end continuous-batching example: a request stream through the
+slot scheduler + chunked-decode engine.
 
-Serves a small (structural-twin) model with continuous slot refill: finished
-requests leave, queued requests take their slot with a fresh prefill — the
-static-batch analogue of continuous batching.
+Requests with mixed prompt lengths and token budgets share a fixed pool of
+decode slots; a finished slot is refilled from the queue while the other
+slots keep decoding at their own per-slot positions — no wave barriers.
 
     PYTHONPATH=src python examples/serve_batch.py
 """
-import time
-
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import reduced_config
 from repro.models import model as M
 from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import SlotScheduler
 
 
 def main():
     cfg = reduced_config("gemma3-12b", layers_per_period=1)
     params = M.init_params(jax.random.key(0), cfg)
-    batch, plen, new = 4, 16, 24
-    engine = ServeEngine(cfg, params, batch=batch, cache_len=plen + new,
-                         eos_id=-1)   # no eos in synthetic vocab
+    batch, cache_len = 4, 48
+    engine = ServeEngine(cfg, params, batch=batch, cache_len=cache_len,
+                         eos_id=-1, sync_every=4)   # no eos in synthetic vocab
 
-    # a queue of 12 synthetic requests served 4 at a time
+    # 12 synthetic requests, mixed prompt lengths and budgets
     rng = np.random.default_rng(0)
-    queue = [rng.integers(0, cfg.vocab_size, plen).tolist() for _ in range(12)]
-    served = 0
-    t0 = time.time()
-    while queue:
-        wave = [queue.pop(0) for _ in range(min(batch, len(queue)))]
-        while len(wave) < batch:          # pad the last wave
-            wave.append(wave[-1])
-        prompts = jnp.asarray(np.array(wave), jnp.int32)
-        out = engine.generate(prompts, max_new_tokens=new)
-        served += len(wave)
-        print(f"wave done: {out.shape[0]} seqs × {out.shape[1]} tokens; "
-              f"sample {out[0, :8].tolist()}")
-    dt = time.time() - t0
-    print(f"served {served} requests, {served*new} tokens in {dt:.1f}s "
-          f"({served*new/dt:.1f} tok/s incl. compile)")
+    sched = SlotScheduler(batch, eos_id=-1)
+    for i in range(12):
+        plen = (8, 16)[i % 2]
+        sched.submit(rng.integers(0, cfg.vocab_size, plen),
+                     max_new_tokens=(12, 24)[i % 2])
+    summary = engine.serve(sched)
+
+    for r in sorted(sched.finished, key=lambda r: r.rid):
+        print(f"req {r.rid:2d} slot {r.slot} prompt {r.prompt_len:3d} "
+              f"gen {r.n_generated:3d} ttft {r.ttft:.2f}s "
+              f"sample {r.tokens[:6]}")
+    print(" ".join(f"{k}={v}" for k, v in summary.items()))
 
 
 if __name__ == "__main__":

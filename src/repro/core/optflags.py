@@ -20,6 +20,17 @@ A/B'd from the same tree. `REPRO_OPT=0` disables all.
                         probability tiles in HBM. Default on for TPU only
                         (interpret mode on CPU is correctness-grade, not
                         speed-grade); training keeps the custom-VJP jnp path.
+  moe_dropless_serve  — route MoE through the dropless dense dispatch
+                        (models/moe.py moe_ffn_dropless) whenever a decode
+                        cache is threaded through the forward. Capacity-drop
+                        dispatch silently drops overflow tokens — fine as a
+                        training approximation, unacceptable when serving a
+                        user's prompt, and it breaks prefill+decode ≡ full
+                        forward exactness. Costs E/k× MoE FLOPs at decode
+                        shapes (T ∈ {1..8}), where the GEMMs are latency-
+                        not throughput-bound. Unlike the perf flags this is
+                        a correctness switch, so REPRO_OPT=0 does NOT
+                        disable it.
   fused_epilogue      — fuse bias add / activation into the GEMM epilogue
                         (models/layers.py passes bias=/act= to sa_dot). On the
                         pallas backend this runs inside the kernel's final K
@@ -46,6 +57,10 @@ FLAGS = {
     "bf16_params_in_layers": _ENABLED,
     "pallas_attention": _ENABLED and jax.default_backend() == "tpu",
     "fused_epilogue": _ENABLED,
+    # NOT gated on REPRO_OPT: serving exactness is a correctness property,
+    # not a perf optimization — the kill-switch must never silently revert
+    # to token-dropping dispatch. A/B via set_flag / moe_ffn(dropless=).
+    "moe_dropless_serve": True,
     # REFUTED (kept for the record, default off): padding the expert dim at
     # trace time (granite 40→48) forces a per-layer-per-µstep reshard of the
     # F-sharded stored weights into the E-sharded compute layout — measured

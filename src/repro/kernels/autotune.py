@@ -58,12 +58,35 @@ CANDIDATES = (
     (256, 512, 1024),
 )
 
+# decode / GEMV shapes: per-token serving GEMMs have M = B·T ∈ {1..16}
+# (clip_blocks rounds any smaller M up to one 16-sublane tile), so bm
+# collapses and the sweep is really over the (bn, bk) tiling — which is
+# what differentiates latency when the whole M side fits in one tile pass
+# and the K-chain (the SA column) dominates. Only swept when M fits one
+# candidate block (m <= bm): at training M these shapes are never
+# competitive and would just add compiles to every sweep.
+DECODE_CANDIDATES = (
+    (16, 128, 512),
+    (16, 256, 1024),
+    (16, 512, 512),
+    (32, 256, 512),
+)
+
 
 def backend_key() -> str:
     """Cache namespace: platform, plus '-interpret' off-TPU (interpret-mode
     timings must never steer hardware block choices)."""
     plat = jax.default_backend()
     return plat if plat == "tpu" else f"{plat}-interpret"
+
+
+def production_dtype() -> str:
+    """The dtype `sa_dot` actually hands the kernel on this backend: f32
+    containers on CPU (`precision.EXACT_CPU_CONTAINERS`), bf16 on TPU.
+    Sweeps (bench / pre-seeders) must tune under this dtype — entries swept
+    under any other are cache keys the production path never reads."""
+    from repro.core.precision import EXACT_CPU_CONTAINERS
+    return "float32" if EXACT_CPU_CONTAINERS else "bfloat16"
 
 
 def cache_path() -> str:
@@ -144,8 +167,9 @@ def reset():
 
 
 def candidates_for(m: int, n: int, k: int) -> list[tuple[int, int, int]]:
+    decode = tuple(c for c in DECODE_CANDIDATES if m <= c[0])
     seen, out = set(), []
-    for bm, bn, bk in CANDIDATES + (default_blocks(m, n, k),):
+    for bm, bn, bk in CANDIDATES + decode + (default_blocks(m, n, k),):
         # same tile-aligned clipping the kernel applies, so cached entries
         # record the blocks that actually run
         c = clip_blocks(bm, bn, bk, m, n, k)
@@ -195,6 +219,25 @@ def tune(m: int, n: int, k: int, *, dtype: str = "bfloat16",
     return best, table
 
 
+def _trace_state_clean() -> bool:
+    """True when no jit trace is in flight (a sweep must execute eagerly).
+    jax >= 0.6 drops `trace_state_clean` from the public `jax.core`."""
+    try:
+        return jax.core.trace_state_clean()
+    except AttributeError:     # pragma: no cover - newer jax
+        from jax._src.core import trace_state_clean
+        return trace_state_clean()
+
+
+def tune_decode(n: int, k: int, ms: tuple[int, ...] = (1, 4, 8), *,
+                dtype: str = "bfloat16", reps: int = 3
+                ) -> dict[int, tuple[int, int, int]]:
+    """Pre-seed the cache with decode-shape winners: M ∈ `ms` GEMVs against
+    one (K, N) weight. Serving engines can call this once at startup so the
+    jitted decode step gets tuned blocks (lookup cannot sweep mid-trace)."""
+    return {m: tune(m, n, k, dtype=dtype, reps=reps)[0] for m in ms}
+
+
 def lookup(m: int, n: int, k: int, *, dtype: str = "bfloat16",
            epilogue: str = "none", sweep: bool | None = None
            ) -> tuple[int, int, int]:
@@ -223,7 +266,7 @@ def lookup(m: int, n: int, k: int, *, dtype: str = "bfloat16",
     if sweep is None:
         sweep = os.environ.get("REPRO_AUTOTUNE", "0") not in ("0", "false",
                                                               "off")
-    if sweep and jax.core.trace_state_clean():
+    if sweep and _trace_state_clean():
         return tune(m, n, k, dtype=dtype, epilogue=epilogue)[0]
     # heuristic fallback — deliberately NOT memoized, so a later in-process
     # sweep can still take over this key (the disk cache is only read once

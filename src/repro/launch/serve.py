@@ -1,53 +1,161 @@
-"""Serving driver: batched generation with the jitted decode engine.
+"""Request-stream serving driver: Poisson arrivals through the
+continuous-batching engine (scheduler + slot table + chunked decode).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --reduced \
-        --batch 4 --prompt-len 32 --max-new 32
+        --batch 4 --requests 16 --rate 8 --prompt-lens 8,16,32 --max-new 32
+
+`--rate` is the mean arrival rate in requests/s (exponential inter-arrival
+times); 0 queues everything up-front. Prompt lengths cycle through the
+`--prompt-lens` set (each distinct length costs one prefill retrace).
+Frontend archs (vlm / enc-dec) fall back to static-batch `generate` — the
+continuous engine is text-only for now — with the same honest accounting:
+tok/s counts real generated tokens (nothing past EOS), and prefill vs
+decode wall time are reported separately.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.models import model as M
 from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import SlotScheduler
+
+
+def build_requests(sched: SlotScheduler, cfg, n: int, rate: float,
+                   prompt_lens: list[int], max_new: int, seed: int):
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    for i in range(n):
+        if rate > 0:
+            t += float(rng.exponential(1.0 / rate))
+        plen = prompt_lens[i % len(prompt_lens)]
+        prompt = rng.integers(0, cfg.vocab_size, plen)
+        sched.submit(prompt, max_new_tokens=max_new, arrival_time=t)
+
+
+def preseed_decode_blocks(cfg, batch: int):
+    """Sweep decode-shape GEMV blocks before serving starts.
+
+    The jitted decode step cannot sweep mid-trace (autotune.lookup falls
+    back to the heuristic there), so winners must be in the cache before
+    the first chunk compiles. Seeds the (N, K) pairs the decode step's
+    projections actually look up — QKV (d→heads), out-proj (heads→d),
+    FFN up/down, lm head — at M = batch (the decode GEMMs flatten
+    (B, 1, D) to (B, D), so batch IS the GEMM M; other Ms would never be
+    consulted). Epilogue-fused keys (e.g. the silu'd gate) fall back to
+    these bare-GEMM entries (autotune.lookup's documented fallback)."""
+    from repro.kernels import autotune
+
+    dtype = autotune.production_dtype()
+    d, hd = cfg.d_model, cfg.hd
+    shapes = {(cfg.num_heads * hd, d), (cfg.num_kv_heads * hd, d),
+              (d, cfg.num_heads * hd), (cfg.padded_vocab, d)}
+    ff = cfg.d_ff_dense or cfg.d_ff
+    if ff:
+        shapes |= {(ff, d), (d, ff)}
+    for n, k in sorted(shapes):
+        autotune.tune_decode(n, k, ms=(batch,), dtype=dtype, reps=2)
+
+
+def serve_continuous(args, cfg, params, plens) -> dict:
+    if args.autotune_decode:
+        preseed_decode_blocks(cfg, args.batch)
+    engine = ServeEngine(cfg, params, args.batch, args.cache_len,
+                         eos_id=args.eos_id, sync_every=args.sync_every)
+    sched = SlotScheduler(args.batch, eos_id=args.eos_id)
+    build_requests(sched, cfg, args.requests, args.rate, plens,
+                   args.max_new, args.seed)
+    summary = engine.serve(sched, greedy=True)
+    for r in sorted(sched.finished, key=lambda r: r.rid):
+        # rejected requests never started: no TTFT / rate to report
+        ttft = float("nan") if r.ttft is None else r.ttft
+        print(f"req {r.rid:3d} slot {r.slot} prompt {r.prompt_len:4d} "
+              f"gen {r.n_generated:4d} ({r.finish_reason or 'n/a':8s}) "
+              f"ttft {ttft:.3f}s "
+              f"decode {r.decode_tok_s or float('nan'):.1f} tok/s")
+    return summary
+
+
+def serve_static(args, cfg, params, plens) -> dict:
+    """Static-batch fallback (frontend archs): `--requests` prompts served
+    in waves of `--batch` (arrivals/`--rate` don't apply — each wave blocks
+    on its slowest member; that gap is exactly the continuous engine's
+    point), same honest accounting as the continuous path. Prompt lengths
+    cycle per *wave* (a wave's batch prefill is rectangular)."""
+    engine = ServeEngine(cfg, params, args.batch, args.cache_len,
+                         eos_id=args.eos_id, sync_every=args.sync_every)
+    served = n_real = 0
+    prefill_s = decode_s = 0.0
+    waves = max(1, -(-args.requests // args.batch))
+    for w in range(waves):
+        plen = plens[w % len(plens)]
+        rng = jax.random.key(args.seed + 1 + w)
+        prompts = jax.random.randint(rng, (args.batch, plen), 0,
+                                     cfg.vocab_size, dtype=jnp.int32)
+        frontend = None
+        if cfg.family == "vlm" or cfg.is_encdec:
+            frontend = jax.random.normal(
+                rng, (args.batch, cfg.frontend_tokens, cfg.d_model))
+        out = np.asarray(engine.generate(prompts, args.max_new,
+                                         frontend=frontend))
+        # only this wave's real requests count (the last wave may be ragged)
+        n_rows = min(args.batch, args.requests - served)
+        # real generated tokens: through the first EOS per row, no further
+        for row in out[:n_rows]:
+            eos = np.nonzero(row == args.eos_id)[0]
+            n_real += int(eos[0]) + 1 if eos.size else row.shape[0]
+        served += n_rows
+        prefill_s += engine.last_stats["prefill_s"]
+        decode_s += engine.last_stats["decode_s"]
+    return {"requests": served, "generated_tokens": n_real,
+            "waves": waves,
+            "prefill_s": round(prefill_s, 4),
+            "decode_s": round(decode_s, 4),
+            "decode_tok_s": round(max(n_real - served, 0) / decode_s, 2)
+            if decode_s > 0 else 0.0}
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slots (continuous) / wave size (static)")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate, req/s (0 = all at t=0)")
+    ap.add_argument("--prompt-lens", default="8,16,32",
+                    help="comma-set of prompt lengths, cycled per request")
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--cache-len", type=int, default=None)
+    ap.add_argument("--sync-every", type=int, default=8,
+                    help="decode steps per host sync / scheduler tick")
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="EOS token id (-1: never fires on synthetic vocab)")
+    ap.add_argument("--autotune-decode", action="store_true",
+                    help="pre-seed decode-shape GEMV blocks (autotune."
+                         "tune_decode) before the first chunk compiles")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     params = M.init_params(jax.random.key(args.seed), cfg)
-    cache_len = args.cache_len or (args.prompt_len + args.max_new)
-    engine = ServeEngine(cfg, params, args.batch, cache_len)
+    plens = [int(x) for x in args.prompt_lens.split(",")]
+    args.cache_len = args.cache_len or (max(plens) + args.max_new)
 
-    rng = jax.random.key(args.seed + 1)
-    prompts = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size, dtype=jnp.int32)
-    frontend = None
     if cfg.family == "vlm" or cfg.is_encdec:
-        frontend = jax.random.normal(
-            rng, (args.batch, cfg.frontend_tokens, cfg.d_model))
-
-    t0 = time.time()
-    out = engine.generate(prompts, args.max_new, frontend=frontend)
-    dt = time.time() - t0
-    toks = out.shape[0] * out.shape[1]
-    print(f"generated {out.shape} in {dt:.2f}s = {toks/dt:.1f} tok/s "
-          f"(incl. prefill+compile)")
-    print("sample:", out[0, :16].tolist())
-    return out
+        summary = serve_static(args, cfg, params, plens)
+        mode = "static"
+    else:
+        summary = serve_continuous(args, cfg, params, plens)
+        mode = "continuous"
+    print(f"[{mode}] " + " ".join(f"{k}={v}" for k, v in summary.items()))
+    return summary
 
 
 if __name__ == "__main__":

@@ -98,9 +98,12 @@ def input_specs(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh,
         step_fn = make_serve_step(cfg)
         token = jax.ShapeDtypeStruct((GB, 1), jnp.int32)
         tshard = NamedSharding(mesh, S.data_specs(mesh, token.shape))
-        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        # per-slot positions (continuous batching): one int32 per batch row,
+        # sharded with the batch like the token ids
+        pos = jax.ShapeDtypeStruct((GB,), jnp.int32)
+        pos_shard = NamedSharding(mesh, S.data_specs(mesh, pos.shape))
         args = (params, token, cache, pos) + ((fe,) if fe is not None else ())
-        in_sh = (pshard, tshard, cshard, repl) + \
+        in_sh = (pshard, tshard, cshard, pos_shard) + \
             ((fe_shard,) if fe is not None else ())
         logits_shard = NamedSharding(mesh, S.data_specs(mesh, (GB, 1, 1)))
         return step_fn, args, in_sh, (logits_shard, cshard)

@@ -31,6 +31,10 @@ class ArchConfig:
     moe_every: int = 1              # MoE FFN every N layers (llama4: 2)
     shared_expert: bool = False
     d_ff_dense: int = 0             # FFN width of non-MoE layers (0 => d_ff)
+    # force the exact dropless dispatch on *every* path (training included);
+    # the serving path is dropless regardless via optflags.moe_dropless_serve.
+    # Used by parity references: capacity-drop is not decode-exact.
+    moe_dropless: bool = False
 
     # SSM (Mamba2 SSD)
     ssm_state: int = 0

@@ -275,8 +275,10 @@ def decode_attention(q, k_cache, v_cache, kv_positions, pos, *, window=0,
                      cap=0.0, scale=None):
     """Single-token attention against a (possibly ring-buffer) cache.
 
-    q: (B, 1, H, hd); caches: (B, S, KVH, hd); kv_positions: (S,) original
-    token position per slot (-1 = empty); pos: scalar current position.
+    q: (B, 1, H, hd); caches: (B, S, KVH, hd); kv_positions: (B, S) original
+    token position per cache slot (-1 = empty); pos: (B,) per-sequence
+    current position — rows of the batch may sit at different depths
+    (continuous batching: each slot serves an independent request).
     """
     B, _, H, hd = q.shape
     S, KVH = k_cache.shape[1], k_cache.shape[2]
@@ -285,10 +287,10 @@ def decode_attention(q, k_cache, v_cache, kv_positions, pos, *, window=0,
     qg = q.reshape(B, KVH, g, hd)
     s = sa_einsum("bhgd,bkhd->bhgk", qg, k_cache).astype(jnp.float32)
     s = softcap(s * scale, cap)
-    ok = (kv_positions >= 0) & (kv_positions <= pos)
+    ok = (kv_positions >= 0) & (kv_positions <= pos[:, None])
     if window:
-        ok &= kv_positions > pos - window
-    s = jnp.where(ok[None, None, None, :], s, -jnp.inf)
+        ok &= kv_positions > pos[:, None] - window
+    s = jnp.where(ok[:, None, None, :], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     out = sa_einsum("bhgk,bkhd->bhgd", p.astype(q.dtype), v_cache)
     return out.reshape(B, 1, H, hd)
@@ -301,7 +303,7 @@ def decode_attention(q, k_cache, v_cache, kv_positions, pos, *, window=0,
 class KVCache(NamedTuple):
     k: jax.Array          # (B, S_cache, KVH, hd)
     v: jax.Array
-    positions: jax.Array  # (S_cache,) int32, -1 = empty
+    positions: jax.Array  # (B, S_cache) int32 per-slot positions, -1 = empty
 
 
 def qkv_project(x, p, cfg, meta):
@@ -400,13 +402,15 @@ def attention_block(x, p, cfg, meta, positions, cache: KVCache | None = None,
         v = S_.constrain(v, "batch", None, "model", None)
     new_cache = None
     if cache is not None and x.shape[1] == 1:
-        slot = pos % cache.k.shape[1]
-        k_c = lax.dynamic_update_slice_in_dim(
-            cache.k, k.astype(cache.k.dtype), slot, axis=1)
-        v_c = lax.dynamic_update_slice_in_dim(
-            cache.v, v.astype(cache.v.dtype), slot, axis=1)
-        pos_c = lax.dynamic_update_slice_in_dim(
-            cache.positions, pos[None].astype(jnp.int32), slot, axis=0)
+        # per-slot ring write: row b of the batch is an independent request
+        # at its own depth, so each row scatters into its own ring slot
+        B = x.shape[0]
+        S = cache.k.shape[1]
+        slot = (pos % S).astype(jnp.int32)              # (B,)
+        b = jnp.arange(B)
+        k_c = cache.k.at[b, slot].set(k[:, 0].astype(cache.k.dtype))
+        v_c = cache.v.at[b, slot].set(v[:, 0].astype(cache.v.dtype))
+        pos_c = cache.positions.at[b, slot].set(pos.astype(jnp.int32))
         new_cache = KVCache(k_c, v_c, pos_c)
         o = decode_attention(q, k_c, v_c, pos_c, pos, window=window,
                              cap=cfg.attn_softcap)
@@ -430,18 +434,20 @@ def attention_block(x, p, cfg, meta, positions, cache: KVCache | None = None,
             k = k.astype(cache.k.dtype)
             v = v.astype(cache.v.dtype)
             if T >= S:                   # keep last S positions (ring)
+                bidx = jnp.arange(k.shape[0])[:, None]
                 k_keep, v_keep = k[:, -S:], v[:, -S:]
-                pos_keep = positions[0, -S:].astype(jnp.int32)
-                # ring layout: slot = pos % S
+                pos_keep = positions[:, -S:].astype(jnp.int32)   # (B, S)
+                # ring layout: slot = pos % S, per batch row
                 slots = pos_keep % S
-                k_c = jnp.zeros_like(cache.k).at[:, slots].set(k_keep)
-                v_c = jnp.zeros_like(cache.v).at[:, slots].set(v_keep)
-                pos_c = jnp.full_like(cache.positions, -1).at[slots].set(pos_keep)
+                k_c = jnp.zeros_like(cache.k).at[bidx, slots].set(k_keep)
+                v_c = jnp.zeros_like(cache.v).at[bidx, slots].set(v_keep)
+                pos_c = jnp.full_like(cache.positions, -1) \
+                    .at[bidx, slots].set(pos_keep)
             else:
                 k_c = lax.dynamic_update_slice_in_dim(cache.k, k, 0, axis=1)
                 v_c = lax.dynamic_update_slice_in_dim(cache.v, v, 0, axis=1)
                 pos_c = lax.dynamic_update_slice_in_dim(
-                    cache.positions, positions[0].astype(jnp.int32), 0, axis=0)
+                    cache.positions, positions.astype(jnp.int32), 0, axis=1)
             new_cache = KVCache(k_c, v_c, pos_c)
     o = o[:, :, :H_orig]   # drop padded q-head outputs before the projection
     return attn_out(o, p), new_cache

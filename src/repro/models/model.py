@@ -174,6 +174,11 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int,
                kv_pad_to: int = 1):
     """Stacked per-layer cache. Local layers get ring buffers of `window`.
 
+    Every leaf carries the batch dimension at axis 1 (after the stacked
+    superblock axis) — including the per-slot KV `positions` — so the serve
+    engine can splice one request's cache fragment into batch row `slot` of
+    every leaf with a single dynamic-update-slice (continuous batching).
+
     `kv_pad_to`: TP axis size — KV heads padded up so the cache shards over
     the model axis without per-step resharding (optflags: pad_kv_heads)."""
     from repro.models.layers import padded_kvh
@@ -194,7 +199,7 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int,
             c["kv"] = KVCache(
                 k=mk((n_super, batch, S, kvh, cfg.hd)),
                 v=mk((n_super, batch, S, kvh, cfg.hd)),
-                positions=mk((n_super, S), jnp.int32, -1))
+                positions=mk((n_super, batch, S), jnp.int32, -1))
         if cfg.family == "ssm" or cfg.hybrid:
             c["ssm"] = (
                 mk((n_super, batch, cfg.n_ssm_heads, cfg.ssm_head_dim,
@@ -206,7 +211,8 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int,
                       cfg.hd)),
                 v=mk((n_super, batch, cfg.frontend_tokens, cfg.num_kv_heads,
                       cfg.hd)),
-                positions=mk((n_super, cfg.frontend_tokens), jnp.int32, -1))
+                positions=mk((n_super, batch, cfg.frontend_tokens),
+                             jnp.int32, -1))
         return c
 
     return tuple(layer_cache(j) for j in range(period))
@@ -259,7 +265,13 @@ def _sublayer(x, p, cfg, meta, positions, cache, pos, encoder_out):
     h = L.norm_apply(x, p["norm2"], cfg.norm, cfg.norm_eps)
     aux = None
     if meta["moe"]:
-        f, aux = moe_ffn(h, p["moe"], cfg, cfg.act)
+        from repro.core import optflags
+        # serving (cache threaded) routes MoE through the dropless dispatch:
+        # capacity-drop is a training-time approximation that breaks
+        # prefill+decode ≡ full-forward exactness (and drops user tokens)
+        dropless = cfg.moe_dropless or (
+            cache is not None and optflags.enabled("moe_dropless_serve"))
+        f, aux = moe_ffn(h, p["moe"], cfg, cfg.act, dropless=dropless)
     elif cfg.family == "audio":
         f = L.ffn_mlp(h, p["ffn"], "gelu")
     else:
@@ -308,9 +320,11 @@ def forward(params, cfg: ArchConfig, tokens, *, positions=None, cache=None,
             pos=None, frontend_embeds=None, last_only: bool = False):
     """Token ids (B, T) → logits. Returns (logits, new_cache, aux).
 
-    `cache`/`pos` engage the decode path; `frontend_embeds` feeds the
-    modality stub (vlm: prepended to the text sequence; audio: encoder
-    input for cross-attention).
+    `cache`/`pos` engage the decode path; `pos` is a (B,) int32 vector of
+    per-sequence positions (each batch row — serving *slot* — may be at its
+    own depth; a scalar is broadcast for single-sequence callers).
+    `frontend_embeds` feeds the modality stub (vlm: prepended to the text
+    sequence; audio: encoder input for cross-attention).
     """
     B, T = tokens.shape
     compute_dtype = jnp.bfloat16
@@ -324,10 +338,11 @@ def forward(params, cfg: ArchConfig, tokens, *, positions=None, cache=None,
         T = x.shape[1]
     elif cfg.is_encdec and frontend_embeds is not None:
         encoder_out = encode(params, cfg, frontend_embeds.astype(compute_dtype))
+    if pos is not None:
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     if positions is None:
         if pos is not None:
-            positions = jnp.broadcast_to(pos, (B,))[:, None] + jnp.zeros(
-                (B, T), jnp.int32)
+            positions = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
         else:
             positions = jnp.broadcast_to(jnp.arange(T), (B, T))
 

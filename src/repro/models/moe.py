@@ -1,12 +1,25 @@
-"""Mixture-of-Experts FFN: top-k routing, capacity-based dispatch, EP.
+"""Mixture-of-Experts FFN: top-k routing, capacity + dropless dispatch, EP.
 
-GShard-style static-shape dispatch: each expert processes its top-C tokens
-(C = ceil(k·T·capacity_factor / E)), gathered into a dense (B, E, C, D)
-buffer, run through batched expert GEMMs with the expert dim sharded over the
-`model` mesh axis (expert parallelism), and scatter-added back with the
-router combine weights. Compute scales with k·T (not E·T), every contraction
-is a GEMM under the SA precision contract, and all shapes are static — no
-ragged collectives, dry-run friendly.
+Two dispatches share one router:
+
+* **Capacity (training)** — GShard-style static shapes: each expert
+  processes its top-C tokens (C = ceil(k·T·capacity_factor / E)), gathered
+  into a dense (B, E, C, D) buffer, run through batched expert GEMMs with
+  the expert dim sharded over the `model` mesh axis (expert parallelism),
+  and scatter-added back with the router combine weights. Compute scales
+  with k·T (not E·T) but overflow tokens are *dropped*.
+
+* **Dropless (serving)** — dense per-token expert compute: every expert runs
+  every token and the k-sparse combine weights zero the non-routed pairs, so
+  the result is the exact top-k router semantics with no capacity drops.
+  Costs E/k× the capacity path's FLOPs — the right trade at decode shapes
+  (T ∈ {1..8} per step), where dropping a user's token is unacceptable and
+  the GEMMs are latency- not throughput-bound. Selected by the serving path
+  (`model._sublayer` under a cache, optflag ``moe_dropless_serve``) or
+  arch-wide via ``cfg.moe_dropless``.
+
+Every contraction in both paths is a GEMM under the SA precision contract,
+and all shapes are static — no ragged collectives, dry-run friendly.
 """
 from __future__ import annotations
 
@@ -46,10 +59,62 @@ def capacity(T: int, E: int, k: int, factor: float = 1.25) -> int:
     return max(1, min(T, math.ceil(T * k * factor / E)))
 
 
-def moe_ffn(x, p, cfg, act: str = "silu", capacity_factor: float = 1.25):
+# dropless buffers are (B, E, Tc, F): chunking T bounds them during long
+# serving prefills (decode steps are single-chunk). Per-token math is
+# row-independent, so chunking never changes results.
+DROPLESS_CHUNK_T = 128
+
+
+def moe_ffn_dropless(x, p, cfg, act: str = "silu"):
+    """Dropless dispatch (serving): exact top-k routing, no capacity drops.
+
+    Dense per-token expert compute — every expert's activation for every
+    token, with the k-sparse combine weights (zero outside the token's
+    top-k) selecting and mixing. Exactly equals per-token
+    ``Σ_{e∈topk(t)} w_e·E_e(x_t)`` at any T, so prefill+decode ≡ full
+    forward for MoE archs. T is processed in chunks of `DROPLESS_CHUNK_T`
+    so the (B, E, Tc, F) activations stay bounded on long prefills. See
+    the module docstring for the FLOPs trade.
+    """
+    from jax import lax
+    B, T, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    combine, aux = router(x, p["router"], k)              # (B, T, E)
+    tp = max(S_.axis_count("model"), 1)
+    ep_axis = "model" if E % tp == 0 else None
+    Tc = min(T, DROPLESS_CHUNK_T)
+    pad = (-T) % Tc
+    xp_ = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    cp = jnp.pad(combine, ((0, 0), (0, pad), (0, 0)))
+    nc = (T + pad) // Tc
+    xb = xp_.reshape(B, nc, Tc, D).swapaxes(0, 1)         # (nc, B, Tc, D)
+    cb = cp.reshape(B, nc, Tc, E).swapaxes(0, 1)
+
+    def chunk(_, xc_cc):
+        xc, cc = xc_cc
+        g = sa_einsum("btd,edf->betf", xc, p["wg"])
+        u = sa_einsum("btd,edf->betf", xc, p["wu"])
+        y = sa_einsum("betf,efd->betd", act_fn(g, act) * u, p["wd"])
+        y = S_.constrain(y, "batch", ep_axis, None, None)
+        return None, jnp.sum(
+            y * cc.swapaxes(1, 2)[..., None].astype(y.dtype), axis=1)
+
+    _, outs = lax.scan(chunk, None, (xb, cb))             # (nc, B, Tc, D)
+    out = outs.swapaxes(0, 1).reshape(B, T + pad, D)[:, :T]
+    if "shared_wg" in p:
+        out = out + ffn_swiglu(x, {"wg": p["shared_wg"], "wu": p["shared_wu"],
+                                   "wd": p["shared_wd"]}, act)
+    return out.astype(x.dtype), aux
+
+
+def moe_ffn(x, p, cfg, act: str = "silu", capacity_factor: float = 1.25,
+            dropless: bool = False):
     """x: (B, T, D); p: router (D, E), wg/wu (E, D, F), wd (E, F, D),
-    optional shared expert (shared_wg/wu/wd)."""
+    optional shared expert (shared_wg/wu/wd). ``dropless=True`` selects the
+    exact serving dispatch (see `moe_ffn_dropless`)."""
     from repro.core import optflags
+    if dropless:
+        return moe_ffn_dropless(x, p, cfg, act)
     B, T, D = x.shape
     E, k = cfg.num_experts, cfg.experts_per_token
     C = capacity(T, E, k, capacity_factor)

@@ -215,8 +215,12 @@ def cache_specs(cfg: ArchConfig, cache_tree: Any, mesh: Mesh, batch: int):
         ps = _path_str(path)
         nd = len(leaf.shape)
         if ps.endswith("positions"):
-            if not batch_ok and nd == 2:    # (n_super, S): S over data
-                return fit(P(None, "data"), leaf.shape)
+            # per-slot positions: (n_super, B, S) — batch rows follow the
+            # k/v batch sharding; long-context (batch=1) shards S over data
+            if nd == 3:
+                if batch_ok:
+                    return fit(P(None, ba, None), leaf.shape)
+                return fit(P(None, None, "data"), leaf.shape)
             return P(*([None] * nd))
         if "ssm" in ps:
             if nd == 5:   # state: (n_super, B, H, P, N) — TP on head dim P

@@ -1,61 +1,245 @@
-"""Batched serving engine: jitted prefill + decode with KV/SSM caches.
+"""Continuous-batching serving engine: jitted prefill + chunked decode.
 
-Static-batch continuous serving: slots hold independent sequences; finished
-slots are refilled by the driver (`launch/serve.py`). Decode is one jitted
-step per token over the whole batch — the `decode_*` dry-run cells lower
-exactly this function.
+Architecture (DESIGN.md §Serving):
+
+* **Slot table** — batch row == slot. The host-side `SlotScheduler`
+  (serve/scheduler.py) admits queued requests into free slots and retires
+  finished ones between jitted decode chunks, so the batch never blocks on
+  its slowest member (the old engine's static batch did).
+* **Per-slot positions** — the decode step takes a (B,) position vector;
+  each KV cache row keys/masks on its own per-slot positions
+  (models/layers.py), so sequences at different depths coexist in one
+  decode GEMM batch. M = batch rows per GEMM is exactly the small-M
+  latency regime the SA skewed pipeline targets.
+* **Batched host syncs** — decode runs `sync_every` steps device-side in a
+  single `lax.scan` before the one tokens fetch + scheduler tick per
+  chunk; no per-token `bool(done.all())` blocking the dispatch queue.
+* **Single-slot prefill** — an admission prefills (1, T_prompt) and the
+  resulting cache fragment is dynamic-update-sliced into batch row `slot`
+  of every cache leaf (they all carry batch at axis 1 — see
+  model.init_cache). Prefill retraces per distinct prompt length; drivers
+  should quantize prompt lengths to a small set. Right-padding prompts
+  instead would corrupt SSM/hybrid states (padded tokens update the
+  recurrence), so exact-length prefill is the correctness-first default.
 """
 from __future__ import annotations
 
-import functools
+import time
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax import lax
 
 from repro.models.config import ArchConfig
 from repro.models import model as M
 from repro.train.step import make_prefill_step, make_serve_step
+from .scheduler import SlotScheduler
 
 
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params: Any, batch: int,
-                 cache_len: int, eos_id: int = 2, cache_dtype=jnp.float32):
+                 cache_len: int, eos_id: int = 2, cache_dtype=jnp.float32,
+                 sync_every: int = 8):
         self.cfg = cfg
         self.params = params
         self.batch = batch
         self.cache_len = cache_len
         self.eos_id = eos_id
         self.cache_dtype = cache_dtype
+        self.sync_every = max(1, int(sync_every))
         self._prefill = jax.jit(make_prefill_step(cfg))
-        self._decode = jax.jit(make_serve_step(cfg))
+        self._serve_step = make_serve_step(cfg)
+        self._chunks: dict[tuple[int, bool], Any] = {}
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        self.last_stats: dict[str, float] = {}
 
-    def new_cache(self):
-        return M.init_cache(self.cfg, self.batch, self.cache_len,
+    def new_cache(self, batch: int | None = None):
+        return M.init_cache(self.cfg, batch or self.batch, self.cache_len,
                             dtype=self.cache_dtype)
+
+    # ------------------------------------------------------------------
+    # jitted building blocks
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _insert_impl(cache, frag, slot):
+        """Splice a batch-1 cache fragment into batch row `slot`.
+
+        Every cache leaf carries batch at axis 1 (model.init_cache), so one
+        tree-wide dynamic-update-slice replaces the slot's KV rows, per-slot
+        positions, and SSM/conv state in a single donated dispatch."""
+        return jax.tree.map(
+            lambda full, one: lax.dynamic_update_slice_in_dim(
+                full, one.astype(full.dtype), slot, axis=1), cache, frag)
+
+    def _chunk_fn(self, steps: int, greedy: bool):
+        """steps decode iterations in one device-side lax.scan.
+
+        Returns (tok, cache, pos, rng, toks (steps, B)); the caller fetches
+        `toks` once per chunk — the only host sync on the decode path."""
+        key = (steps, greedy)
+        if key not in self._chunks:
+            serve_step = self._serve_step
+
+            def chunk(params, tok, cache, pos, frontend, rng):
+                def body(carry, _):
+                    tok, cache, pos, rng = carry
+                    logits, cache = serve_step(params, tok[:, None], cache,
+                                               pos, frontend)
+                    if greedy:
+                        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+                    else:
+                        rng, k = jax.random.split(rng)
+                        nxt = jax.random.categorical(
+                            k, logits[:, -1]).astype(jnp.int32)
+                    return (nxt, cache, pos + 1, rng), nxt
+
+                (tok, cache, pos, rng), toks = lax.scan(
+                    body, (tok, cache, pos, rng), length=steps)
+                return tok, cache, pos, rng, toks
+
+            self._chunks[key] = jax.jit(chunk, donate_argnums=(2,))
+        return self._chunks[key]
+
+    # ------------------------------------------------------------------
+    # static-batch generation (convenience / frontend archs)
+    # ------------------------------------------------------------------
 
     def generate(self, prompts: jax.Array, max_new_tokens: int,
                  frontend=None, greedy: bool = True, rng=None):
-        """prompts: (B, T_prompt) int32 → (B, max_new_tokens) int32."""
+        """prompts: (B, T_prompt) int32 → (B, ≤max_new_tokens) int32.
+
+        Static batch: all B sequences prefill together and decode in
+        lock-step. Decode runs in device-side chunks of `sync_every` steps;
+        EOS is checked once per chunk on the fetched token block (the old
+        per-token `bool(done.all())` blocked the dispatch queue every
+        step), so an early-finishing batch stops at chunk granularity.
+        `last_stats` records the prefill/decode wall split."""
         B, T = prompts.shape
         assert B == self.batch
+        rng = rng if rng is not None else jax.random.key(0)
+        t0 = time.monotonic()
         cache = self.new_cache()
         logits, cache = self._prefill(self.params, prompts, cache, frontend)
-        out = []
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        done = jnp.zeros((B,), bool)
+        first = np.asarray(tok)              # sync: prefill boundary (TTFT)
+        t_prefill = time.monotonic() - t0
+        pos = jnp.full((B,), T, jnp.int32)
+        cols = [first]
+        done = first == self.eos_id
+        while len(cols) < max_new_tokens and not done.all():
+            steps = min(self.sync_every, max_new_tokens - len(cols))
+            tok, cache, pos, rng, toks = self._chunk_fn(steps, greedy)(
+                self.params, tok, cache, pos, frontend, rng)
+            t_np = np.asarray(toks)          # one sync per chunk
+            cols.extend(t_np)
+            done |= (t_np == self.eos_id).any(axis=0)
+        self.last_stats = {"prefill_s": t_prefill,
+                           "decode_s": time.monotonic() - t0 - t_prefill,
+                           "decode_tokens": (len(cols) - 1) * B}
+        return jnp.asarray(np.stack(cols, axis=1))
+
+    # ------------------------------------------------------------------
+    # continuous batching
+    # ------------------------------------------------------------------
+
+    def serve(self, scheduler: SlotScheduler, greedy: bool = True, rng=None,
+              clock=time.monotonic) -> dict:
+        """Run the continuous-batching loop until the scheduler drains.
+
+        Per-request results/metrics live on the `Request` objects
+        (`scheduler.finished`); returns `scheduler.summary()` merged with
+        the engine's prefill/decode wall-time split. Text-only for now:
+        per-slot frontends would need fragment caches of their own.
+        """
+        assert scheduler.n_slots == self.batch, \
+            (scheduler.n_slots, self.batch)
+        if self.cfg.family == "vlm" or self.cfg.is_encdec:
+            # prefill/decode below run frontend=None: a vlm/enc-dec arch
+            # would silently skip its encoder and generate garbage
+            raise ValueError(
+                "continuous serving is text-only (per-slot frontends are a "
+                "ROADMAP item); use ServeEngine.generate for frontend archs")
+        B = self.batch
         rng = rng if rng is not None else jax.random.key(0)
-        for i in range(max_new_tokens):
-            out.append(tok)
-            done = done | (tok == self.eos_id)
-            pos = jnp.int32(T + i)
-            logits, cache = self._decode(self.params, tok[:, None], cache,
-                                         pos, frontend)
-            if greedy:
-                tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            else:
-                rng, k = jax.random.split(rng)
-                tok = jax.random.categorical(k, logits[:, -1]).astype(jnp.int32)
-            if bool(done.all()):
-                break
-        return jnp.stack(out, axis=1)
+        t0 = clock()
+        skew = 0.0          # engine-time fast-forward for frozen clocks
+
+        def now():
+            return clock() - t0 + skew
+        cache = self.new_cache()
+        tok = jnp.zeros((B,), jnp.int32)
+        pos = jnp.zeros((B,), jnp.int32)
+        prefill_s = decode_s = 0.0
+
+        while not scheduler.drained():
+            for slot in scheduler.free_slots():
+                req = scheduler.admit(slot, now())
+                if req is None:
+                    break
+                if (self.cfg.family != "ssm"
+                        and req.prompt_len + req.max_new_tokens
+                        > self.cache_len):
+                    # a global-attention KV ring must never wrap: the write
+                    # would overwrite live prompt keys and silently corrupt
+                    # the request (local windows and SSM state are the only
+                    # wrap-safe caches). Retire it as rejected — in-flight
+                    # slots keep decoding.
+                    scheduler.reject(slot, now())
+                    continue
+                t_p = now()
+                frag = self.new_cache(batch=1)
+                logits, frag = self._prefill(
+                    self.params, jnp.asarray(req.prompt, jnp.int32)[None],
+                    frag, None)
+                if greedy:
+                    first = int(np.asarray(jnp.argmax(logits[0, -1])))
+                else:
+                    rng, k = jax.random.split(rng)
+                    first = int(np.asarray(
+                        jax.random.categorical(k, logits[0, -1])))
+                cache = self._insert(cache, frag, slot)
+                tok = tok.at[slot].set(first)
+                pos = pos.at[slot].set(req.prompt_len)
+                dt = now() - t_p
+                prefill_s += dt
+                scheduler.start(slot, first, now(), prefill_s=dt)
+
+            if scheduler.num_active() == 0:
+                # queue non-empty but nothing has arrived yet: wait for the
+                # next arrival instead of spinning
+                nxt = scheduler.next_arrival()
+                if nxt is None:
+                    break
+                wait = nxt - now()
+                if wait > 0:
+                    before = clock()
+                    time.sleep(min(wait, 0.05))
+                    if clock() == before:
+                        # injected/frozen clock: real sleeps cannot advance
+                        # it — fast-forward engine time to the arrival
+                        skew += wait
+                continue
+
+            t_d = now()
+            tok, cache, pos, rng, toks = self._chunk_fn(
+                self.sync_every, greedy)(self.params, tok, cache, pos,
+                                         None, rng)
+            toks_np = np.asarray(toks)       # the chunk's single host sync
+            decode_s += now() - t_d
+            scheduler.observe(toks_np, now())
+
+        summary = scheduler.summary()
+        summary |= {"prefill_s": round(prefill_s, 4),
+                    "decode_s": round(decode_s, 4),
+                    "wall_s": round(now(), 4)}
+        served = summary["requests"] - summary["rejected"]
+        if decode_s > 0 and served:
+            # each *served* request's first token came from prefill, not
+            # the decode chunks (rejected ones produced nothing at all)
+            decode_tokens = summary["generated_tokens"] - served
+            summary["decode_tok_s"] = round(decode_tokens / decode_s, 2)
+        self.last_stats = summary
+        return summary

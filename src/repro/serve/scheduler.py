@@ -1,0 +1,226 @@
+"""Continuous-batching slot scheduler (host-side control plane).
+
+The engine owns the device state (params, KV/SSM cache, the per-slot token
+and position vectors); the scheduler owns the *request* state: a FIFO
+arrival queue, a slot table mapping batch rows to in-flight requests,
+EOS / max-token completion, and per-request latency metrics. It never
+touches jax — one scheduler tick per decode chunk is the only host work on
+the decode path, so the dispatch queue stays full between syncs.
+
+Semantics
+---------
+* A batch row of the decode step is a **slot**. A slot holds at most one
+  request; finished slots are refilled from the queue between chunks
+  instead of blocking the batch on its slowest member.
+* Requests arrive at `arrival_time` (seconds on the engine's clock; 0 =
+  already queued). Admission is FIFO among arrived requests.
+* The engine decodes `sync_every` tokens device-side per chunk, then hands
+  the whole (steps, B) token block to `observe()`. Tokens a slot produced
+  *after* its EOS / token budget inside the chunk are discarded here and
+  never counted — tok/s reports real generated tokens only.
+* Completion timestamps are quantized to chunk boundaries (the host only
+  observes tokens once per chunk); TTFT is exact (prefill is a sync point).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and (after serving) its result + metrics."""
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    arrival_time: float = 0.0
+
+    # filled in by the scheduler as the request is served
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    t_admitted: float | None = None
+    t_first_token: float | None = None   # TTFT reference point
+    t_done: float | None = None
+    prefill_s: float = 0.0
+    finish_reason: str = ""              # "eos" | "length"
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def n_generated(self) -> int:
+        """Real generated tokens (post-EOS chunk padding never lands here)."""
+        return len(self.tokens)
+
+    @property
+    def ttft(self) -> float | None:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.arrival_time
+
+    @property
+    def decode_tok_s(self) -> float | None:
+        """Decode-only rate: tokens after the first / time after TTFT."""
+        if self.t_done is None or self.t_first_token is None:
+            return None
+        dt = self.t_done - self.t_first_token
+        return (self.n_generated - 1) / dt if dt > 0 else None
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request | None = None
+
+
+class SlotScheduler:
+    """Slot table + arrival queue + per-request accounting."""
+
+    def __init__(self, n_slots: int, eos_id: int = 2):
+        self.n_slots = n_slots
+        self.eos_id = eos_id
+        self.pending: deque[Request] = deque()
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.finished: list[Request] = []
+        self.depth_samples: list[int] = []
+        self.refills = 0          # admissions into a previously-used slot
+        self._slot_used = [False] * n_slots
+        self._next_rid = 0
+
+    # ------------------------------------------------------------------
+    # submission / admission
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int,
+               arrival_time: float = 0.0) -> Request:
+        req = Request(rid=self._next_rid, prompt=list(map(int, prompt)),
+                      max_new_tokens=int(max_new_tokens),
+                      arrival_time=float(arrival_time))
+        self._next_rid += 1
+        # keep the queue sorted by arrival (stable: ties stay in submit
+        # order), so admission is FIFO among *arrived* requests — a late
+        # submit with an early arrival_time must not be head-of-line
+        # blocked behind a future arrival
+        i = len(self.pending)
+        while i > 0 and self.pending[i - 1].arrival_time > req.arrival_time:
+            i -= 1
+        self.pending.insert(i, req)
+        return req
+
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s.req is None]
+
+    def next_arrival(self) -> float | None:
+        return self.pending[0].arrival_time if self.pending else None
+
+    def admit(self, slot_idx: int, now: float) -> Request | None:
+        """Pop the queue head into `slot_idx` if it has arrived by `now`."""
+        if not self.pending or self.pending[0].arrival_time > now:
+            return None
+        req = self.pending.popleft()
+        req.slot = slot_idx
+        req.t_admitted = now
+        if self._slot_used[slot_idx]:
+            self.refills += 1
+        self._slot_used[slot_idx] = True
+        self.slots[slot_idx].req = req
+        return req
+
+    def reject(self, slot_idx: int, now: float,
+               reason: str = "rejected") -> Request:
+        """Retire the just-admitted request without serving it (e.g. the
+        engine found it cannot fit the cache); the batch keeps going."""
+        slot = self.slots[slot_idx]
+        req = slot.req
+        assert req is not None
+        self._finish(slot, req, reason, now)
+        return req
+
+    def start(self, slot_idx: int, first_token: int, now: float,
+              prefill_s: float = 0.0):
+        """Record the prefill's argmax token (the first generated token)."""
+        slot = self.slots[slot_idx]
+        req = slot.req
+        assert req is not None
+        req.t_first_token = now
+        req.prefill_s = prefill_s
+        self._accept(slot, req, int(first_token), now)
+
+    # ------------------------------------------------------------------
+    # decode ticks
+    # ------------------------------------------------------------------
+
+    def positions(self) -> np.ndarray:
+        """(B,) int32 next-decode positions, derived from request progress
+        (free slots report 0). Introspection/tests only — the engine's
+        device-side pos vector is the single authoritative copy."""
+        return np.array(
+            [0 if s.req is None
+             else s.req.prompt_len + max(1, s.req.n_generated) - 1
+             for s in self.slots], np.int32)
+
+    def num_active(self) -> int:
+        return sum(1 for s in self.slots if s.req is not None)
+
+    def drained(self) -> bool:
+        return not self.pending and self.num_active() == 0
+
+    def observe(self, chunk_tokens: np.ndarray, now: float):
+        """Consume one decode chunk: (steps, B) tokens fetched from device.
+
+        Row s of the chunk is the token each slot emitted at step s. Tokens
+        for free slots, and steps after a slot finished mid-chunk, are
+        discarded (the device keeps decoding every row; the garbage never
+        reaches a request).
+        """
+        steps, B = chunk_tokens.shape
+        assert B == self.n_slots, (B, self.n_slots)
+        for s in range(steps):
+            for i, slot in enumerate(self.slots):
+                if slot.req is None:
+                    continue
+                self._accept(slot, slot.req, int(chunk_tokens[s, i]), now)
+        self.depth_samples.append(len(self.pending))
+
+    def _accept(self, slot: _Slot, req: Request, token: int, now: float):
+        req.tokens.append(token)
+        if token == self.eos_id:
+            self._finish(slot, req, "eos", now)
+        elif req.n_generated >= req.max_new_tokens:
+            self._finish(slot, req, "length", now)
+
+    def _finish(self, slot: _Slot, req: Request, reason: str, now: float):
+        req.finish_reason = reason
+        req.t_done = now
+        self.finished.append(req)
+        slot.req = None
+
+    # ------------------------------------------------------------------
+    # metrics
+    # ------------------------------------------------------------------
+
+    def summary(self) -> dict:
+        done = self.finished
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        gen = sum(r.n_generated for r in done)
+        out = {
+            "requests": len(done),
+            "generated_tokens": gen,       # real tokens, no post-EOS padding
+            "prompt_tokens": sum(r.prompt_len for r in done),
+            "eos_finishes": sum(1 for r in done if r.finish_reason == "eos"),
+            "rejected": sum(1 for r in done
+                            if r.finish_reason == "rejected"),
+            "slot_refills": self.refills,
+            "mean_queue_depth": float(np.mean(self.depth_samples))
+            if self.depth_samples else 0.0,
+            "max_queue_depth": max(self.depth_samples, default=0),
+        }
+        if ttfts:
+            out["ttft_mean_s"] = float(np.mean(ttfts))
+            out["ttft_max_s"] = float(np.max(ttfts))
+        rates = [r.decode_tok_s for r in done if r.decode_tok_s]
+        if rates:
+            out["decode_tok_s_mean_per_req"] = float(np.mean(rates))
+        return out

@@ -91,8 +91,12 @@ def make_prefill_step(cfg: ArchConfig):
 
 
 def make_serve_step(cfg: ArchConfig):
-    """One decode step: (params, token (B,1), cache, pos, [frontend]) →
-    (logits (B,1,V), new_cache). The `decode_*`/`long_*` dry-run target."""
+    """One decode step: (params, token (B,1), cache, pos (B,), [frontend]) →
+    (logits (B,1,V), new_cache). The `decode_*`/`long_*` dry-run target.
+
+    `pos` is a per-slot position vector — under continuous batching each
+    batch row serves an independent request at its own depth (scalars are
+    broadcast for single-sequence callers)."""
 
     def serve_step(params, token, cache, pos, frontend=None):
         logits, cache, _ = M.forward(params, cfg, token, cache=cache,

@@ -12,22 +12,23 @@ from repro.serve.engine import ServeEngine
 FP32 = PrecisionPolicy(input_format="fp32")
 
 DECODE_ARCHS = ["qwen2.5-14b", "gemma2-9b", "mamba2-2.7b", "hymba-1.5b",
-                # MoE: GShard capacity dispatch (moe.py) drops overflow
-                # tokens at T=12 (C=4) but cannot drop at decode (T=1, C=1),
-                # so exact prefill/decode parity is structurally impossible
-                # until a dropless serving dispatch exists (ROADMAP).
-                pytest.param("granite-moe-3b-a800m", marks=pytest.mark.xfail(
-                    reason="capacity-drop MoE dispatch is not decode-exact",
-                    strict=False)),
-                "whisper-tiny"]
+                "granite-moe-3b-a800m", "whisper-tiny"]
 
 
 @pytest.mark.parametrize("arch", DECODE_ARCHS)
 def test_prefill_decode_matches_full_forward(arch):
+    import dataclasses
     cfg = reduced_config(arch)
     if cfg.remat:
-        import dataclasses
         cfg = dataclasses.replace(cfg, remat=False)
+    if cfg.num_experts:
+        # the serving path (prefill+decode under a cache) always uses the
+        # dropless dispatch — exact top-k routing. The full-forward
+        # reference must use the same semantics: capacity-drop is a
+        # training-time approximation that drops overflow tokens at T=12
+        # (C=4) but structurally cannot drop at T=1, so it was never
+        # decode-exact (the old xfail).
+        cfg = dataclasses.replace(cfg, moe_dropless=True)
     with use_policy(FP32):
         params = M.init_params(jax.random.key(0), cfg)
         B, T = 2, 12

@@ -1,0 +1,271 @@
+"""Continuous-batching semantics: slot refill, EOS mid-batch, per-slot
+positions vs single-sequence reference decode, dropless-MoE dispatch."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PrecisionPolicy, use_policy
+from repro.configs import reduced_config
+from repro.models import model as M
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import SlotScheduler
+
+FP32 = PrecisionPolicy(input_format="fp32")
+
+
+def _cfg(name="qwen2.5-14b"):
+    return dataclasses.replace(reduced_config(name), remat=False)
+
+
+def _reference_decode(cfg, params, prompt, n, eos_id=-1, cache_len=64):
+    """Independent batch-1 greedy decode straight through M.forward."""
+    prompt = jnp.asarray(prompt, jnp.int32)[None]
+    plen = prompt.shape[1]
+    cache = M.init_cache(cfg, 1, cache_len, dtype=jnp.float32)
+    logits, cache, _ = M.forward(params, cfg, prompt, cache=cache,
+                                 last_only=True)
+    tok = int(np.asarray(jnp.argmax(logits[0, -1])))
+    out = [tok]
+    for i in range(n - 1):
+        if tok == eos_id:
+            break
+        logits, cache, _ = M.forward(
+            params, cfg, jnp.asarray([[tok]], jnp.int32), cache=cache,
+            pos=jnp.full((1,), plen + i, jnp.int32))
+        tok = int(np.asarray(jnp.argmax(logits[0, -1])))
+        out.append(tok)
+    if eos_id in out:                     # truncate after the first EOS
+        out = out[:out.index(eos_id) + 1]
+    return out
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = _cfg()
+    with use_policy(FP32):
+        params = M.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, lens, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n).tolist() for n in lens]
+
+
+def test_slot_refill_with_per_slot_positions(dense_setup):
+    """A finished slot is refilled while the other slot keeps decoding;
+    every request must match its single-sequence reference exactly —
+    which is only possible if each slot keys the cache and RoPE on its own
+    (B,) position, not a shared scalar."""
+    cfg, params = dense_setup
+    prompts = _prompts(cfg, [5, 9, 7, 11])
+    budgets = [20, 4, 6, 5]
+    with use_policy(FP32):
+        engine = ServeEngine(cfg, params, batch=2, cache_len=64,
+                             eos_id=-1, sync_every=2)
+        sched = SlotScheduler(2, eos_id=-1)
+        for p, n in zip(prompts, budgets):
+            sched.submit(p, max_new_tokens=n)
+        summary = engine.serve(sched)
+        refs = [_reference_decode(cfg, params, p, n)
+                for p, n in zip(prompts, budgets)]
+    by_rid = {r.rid: r for r in sched.finished}
+    assert len(by_rid) == 4
+    for rid, ref in enumerate(refs):
+        assert by_rid[rid].tokens == ref, f"request {rid} diverged"
+    assert summary["slot_refills"] >= 2
+    # request 1 (4 tokens) retired early and its slot was refilled while
+    # request 0 (20 tokens) was still mid-decode in the other slot
+    assert by_rid[1].t_done < by_rid[0].t_done
+    later = [r for r in sched.finished
+             if r.t_admitted > by_rid[1].t_done - 1e-9 and r.rid != 1]
+    assert later and any(r.t_admitted < by_rid[0].t_done for r in later)
+
+
+def test_eos_mid_batch_frees_slot(dense_setup):
+    """An EOS in one slot truncates that request and frees the slot while
+    the neighbour slot keeps decoding; post-EOS chunk tokens never land."""
+    cfg, params = dense_setup
+    prompts = _prompts(cfg, [6, 8], seed=3)
+    with use_policy(FP32):
+        probe = _reference_decode(cfg, params, prompts[1], 10)
+        eos = probe[2]          # the 3rd token the model really emits
+        engine = ServeEngine(cfg, params, batch=2, cache_len=64,
+                             eos_id=eos, sync_every=4)
+        sched = SlotScheduler(2, eos_id=eos)
+        reqA = sched.submit(prompts[0], max_new_tokens=12)
+        reqB = sched.submit(prompts[1], max_new_tokens=12)
+        engine.serve(sched)
+        refs = [_reference_decode(cfg, params, p, 12, eos_id=eos)
+                for p in prompts]
+    assert reqB.tokens == refs[1] and reqB.tokens[-1] == eos
+    assert reqB.finish_reason == "eos" and reqB.n_generated == 3
+    assert reqA.tokens == refs[0]
+    assert reqA.n_generated >= reqB.n_generated
+    assert reqA.t_done >= reqB.t_done
+
+
+def test_generate_matches_continuous_serve(dense_setup):
+    """Static-batch generate ≡ continuous serve for lock-step requests."""
+    cfg, params = dense_setup
+    prompts = _prompts(cfg, [8, 8], seed=5)
+    with use_policy(FP32):
+        engine = ServeEngine(cfg, params, batch=2, cache_len=32, eos_id=-1,
+                             sync_every=3)
+        out = np.asarray(engine.generate(jnp.asarray(prompts, jnp.int32), 6))
+        sched = SlotScheduler(2, eos_id=-1)
+        for p in prompts:
+            sched.submit(p, max_new_tokens=6)
+        engine.serve(sched)
+    by_rid = {r.rid: r for r in sched.finished}
+    for rid in (0, 1):
+        assert by_rid[rid].tokens == out[rid].tolist()
+
+
+def test_scheduler_bookkeeping_pure():
+    """Host-side slot-table semantics, no jax: refill, EOS truncation,
+    token-budget truncation, queue depth."""
+    sched = SlotScheduler(2, eos_id=99)
+    r0 = sched.submit([1, 2, 3], max_new_tokens=5)
+    r1 = sched.submit([4, 5], max_new_tokens=2)
+    r2 = sched.submit([6], max_new_tokens=3, arrival_time=0.0)
+    assert sched.free_slots() == [0, 1]
+    assert sched.admit(0, now=0.0) is r0 and sched.admit(1, now=0.0) is r1
+    sched.start(0, first_token=10, now=0.1)
+    sched.start(1, first_token=11, now=0.1)
+    # next decode consumes the first generated token at pos == prompt_len
+    assert sched.positions().tolist() == [3, 2]
+    # chunk of 3 steps: r1 hits its 2-token budget at step 0; its later
+    # chunk rows (and the EOS-looking 99s in them) must be discarded
+    chunk = np.array([[20, 30], [21, 99], [99, 31]], np.int32)
+    sched.observe(chunk, now=0.5)
+    assert r1.tokens == [11, 30] and r1.finish_reason == "length"
+    assert r0.tokens == [10, 20, 21, 99] and r0.finish_reason == "eos"
+    assert sched.free_slots() == [0, 1] and sched.num_active() == 0
+    assert sched.admit(0, now=1.0) is r2 and sched.refills == 1
+    sched.start(0, first_token=99, now=1.1)       # EOS as the first token
+    assert r2.finish_reason == "eos" and r2.n_generated == 1
+    assert sched.drained()
+    s = sched.summary()
+    assert s["generated_tokens"] == 4 + 2 + 1
+    assert s["eos_finishes"] == 2 and s["slot_refills"] == 1
+
+
+def test_frozen_clock_arrivals_fast_forward(dense_setup):
+    """An injected non-advancing clock must not hang the serve loop on
+    future arrivals: engine time fast-forwards to the next arrival, so
+    latency tests can be fully deterministic."""
+    cfg, params = dense_setup
+    prompts = _prompts(cfg, [6, 6], seed=11)
+    with use_policy(FP32):
+        engine = ServeEngine(cfg, params, batch=2, cache_len=32,
+                             eos_id=-1, sync_every=2)
+        sched = SlotScheduler(2, eos_id=-1)
+        sched.submit(prompts[0], max_new_tokens=3, arrival_time=5.0)
+        sched.submit(prompts[1], max_new_tokens=3, arrival_time=9.0)
+        summary = engine.serve(sched, clock=lambda: 0.0)
+    assert summary["requests"] == 2
+    # TTFT is measured on fast-forwarded engine time: admission happens
+    # exactly at each arrival, so TTFT collapses to the prefill instant
+    assert all(r.ttft == 0.0 for r in sched.finished)
+    assert all(r.t_admitted in (5.0, 9.0) for r in sched.finished)
+
+
+def test_oversized_request_rejected(dense_setup):
+    """prompt_len + max_new_tokens beyond cache_len would wrap the global
+    KV ring and silently corrupt output — the request is retired as
+    rejected while the rest of the batch keeps serving."""
+    cfg, params = dense_setup
+    prompts = _prompts(cfg, [12, 6], seed=13)
+    with use_policy(FP32):
+        engine = ServeEngine(cfg, params, batch=2, cache_len=16, eos_id=-1,
+                             sync_every=2)
+        sched = SlotScheduler(2, eos_id=-1)
+        bad = sched.submit(prompts[0], max_new_tokens=8)    # 12+8 > 16
+        good = sched.submit(prompts[1], max_new_tokens=4)
+        summary = engine.serve(sched)
+        ref = _reference_decode(cfg, params, prompts[1], 4, cache_len=16)
+    assert bad.finish_reason == "rejected" and bad.tokens == []
+    assert good.tokens == ref
+    assert summary["rejected"] == 1 and summary["requests"] == 2
+
+
+def test_scheduler_admission_is_fifo_among_arrived():
+    """A late submit with an early arrival must not be head-of-line
+    blocked behind a queued future arrival."""
+    sched = SlotScheduler(1, eos_id=-1)
+    late = sched.submit([1], 1, arrival_time=10.0)
+    early = sched.submit([2], 1, arrival_time=0.0)
+    assert sched.next_arrival() == 0.0
+    assert sched.admit(0, now=0.0) is early
+    assert sched.admit(0, now=0.0) is None      # `late` hasn't arrived
+    sched.start(0, first_token=5, now=0.0)      # retires early (budget 1)
+    assert sched.admit(0, now=10.0) is late
+
+
+def test_decode_candidates_gated_on_m():
+    """GEMV candidates sweep only when the whole M side fits one block;
+    training-M sweeps must not pay their compiles."""
+    from repro.kernels.autotune import candidates_for
+    assert all(bm <= 32 for bm, _, _ in candidates_for(4, 512, 512))
+    assert all(bm > 32 for bm, _, _ in candidates_for(1024, 1024, 1024))
+
+
+def test_dropless_matches_capacity_when_nothing_drops():
+    """With capacity ≥ T no token drops, so the GShard dispatch and the
+    dense dropless dispatch must agree — they are the same math."""
+    from repro.models.moe import moe_ffn
+    cfg = _cfg("granite-moe-3b-a800m")
+    rng = jax.random.key(0)
+    d, E, F = cfg.d_model, cfg.num_experts, cfg.d_ff
+    ks = jax.random.split(rng, 5)
+    p = {"router": jax.random.normal(ks[0], (d, E)) * 0.1,
+         "wg": jax.random.normal(ks[1], (E, d, F)) * 0.1,
+         "wu": jax.random.normal(ks[2], (E, d, F)) * 0.1,
+         "wd": jax.random.normal(ks[3], (E, F, d)) * 0.1}
+    x = jax.random.normal(ks[4], (2, 4, d))
+    with use_policy(FP32):
+        cap, aux_c = moe_ffn(x, p, cfg, capacity_factor=float(E))
+        drop, aux_d = moe_ffn(x, p, cfg, dropless=True)
+    np.testing.assert_allclose(np.asarray(cap), np.asarray(drop),
+                               rtol=1e-5, atol=1e-5)
+    for k in aux_c:
+        np.testing.assert_allclose(np.asarray(aux_c[k]),
+                                   np.asarray(aux_d[k]), rtol=1e-6)
+
+
+def test_staggered_positions_decode_vector(dense_setup):
+    """Direct (B,) position-vector check: two sequences decoded at
+    *different* depths in one batch match their batch-1 references."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(7)
+    pA = rng.integers(0, cfg.vocab_size, 6).tolist()
+    pB = rng.integers(0, cfg.vocab_size, 9).tolist()
+    with use_policy(FP32):
+        refA = _reference_decode(cfg, params, pA, 4, cache_len=32)
+        refB = _reference_decode(cfg, params, pB, 4, cache_len=32)
+        # batched: prefill each prompt alone, splice into a 2-row cache
+        engine = ServeEngine(cfg, params, batch=2, cache_len=32, eos_id=-1)
+        cache = engine.new_cache()
+        toks, poss = [], []
+        for slot, prompt in enumerate((pA, pB)):
+            frag = engine.new_cache(batch=1)
+            logits, frag = engine._prefill(
+                params, jnp.asarray(prompt, jnp.int32)[None], frag, None)
+            cache = engine._insert(cache, frag, slot)
+            toks.append(int(np.asarray(jnp.argmax(logits[0, -1]))))
+            poss.append(len(prompt))
+        tok = jnp.asarray(toks, jnp.int32)
+        pos = jnp.asarray(poss, jnp.int32)
+        got = [[t] for t in toks]
+        for _ in range(3):
+            logits, cache, _ = M.forward(params, cfg, tok[:, None],
+                                         cache=cache, pos=pos)
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            pos = pos + 1
+            for b, t in enumerate(np.asarray(tok)):
+                got[b].append(int(t))
+    assert got[0] == refA and got[1] == refB

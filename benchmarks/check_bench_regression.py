@@ -1,0 +1,104 @@
+"""Fail CI when a tuned GEMM latency regresses against the committed
+baseline.
+
+    python benchmarks/check_bench_regression.py BENCH_kernels.json \
+        benchmarks/BENCH_baseline.json --rtol 0.2
+
+Compares the ``tuned_us`` column of the ``autotune`` and ``decode`` tables
+(the tuned SA-GEMM / decode-GEMV latencies) row by row against the
+baseline. Interpret-mode wall times vary with runner speed, so by default
+each ratio is normalized by a **machine-speed reference outside the
+compared set**: the ``backend`` table's ``sa_dot_xla_*`` row (a plain
+lax.dot_general timing the SA kernels can't regress). A uniformly slower
+runner scores 1.0 everywhere, while a kernel change that slows *all* the
+tuned rows still stands out against the unchanged XLA reference. If the
+reference row is missing from either file it falls back to the median
+new/base ratio of the compared rows (which can only catch regressions
+hitting a minority of rows). Disable with ``--no-normalize`` when both
+files come from the same machine.
+
+Exit codes: 0 ok, 1 regression, 2 usage/schema error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+
+COMPARED_TABLES = ("autotune", "decode")
+REFERENCE_TABLE, REFERENCE_PREFIX = "backend", "sa_dot_xla_"
+
+
+def load_rows(path: str) -> tuple[dict[tuple[str, str], float], float | None]:
+    """→ ({(table, name): tuned_us}, reference_us-or-None)."""
+    with open(path) as f:
+        doc = json.load(f)
+    rows, ref = {}, None
+    for r in doc.get("rows", []):
+        if r.get("table") in COMPARED_TABLES and "tuned_us" in r:
+            rows[(r["table"], r["name"])] = float(r["tuned_us"])
+        elif (r.get("table") == REFERENCE_TABLE
+              and str(r.get("name", "")).startswith(REFERENCE_PREFIX)
+              and "us_per_call" in r):
+            ref = float(r["us_per_call"])
+    if not rows:
+        print(f"no comparable rows (tables {COMPARED_TABLES} with "
+              f"tuned_us) in {path}", file=sys.stderr)
+        sys.exit(2)
+    return rows, ref
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new", help="fresh BENCH_kernels.json")
+    ap.add_argument("baseline", help="committed benchmarks/BENCH_baseline.json")
+    ap.add_argument("--rtol", type=float, default=0.2,
+                    help="allowed fractional regression (0.2 = +20%%)")
+    ap.add_argument("--no-normalize", action="store_true",
+                    help="compare raw wall times (same-machine runs only)")
+    args = ap.parse_args(argv)
+
+    new, new_ref = load_rows(args.new)
+    base, base_ref = load_rows(args.baseline)
+    common = sorted(set(new) & set(base))
+    if not common:
+        print("no overlapping rows between new run and baseline",
+              file=sys.stderr)
+        return 2
+    for missing in sorted(set(base) - set(new)):
+        print(f"WARN: baseline row {missing} absent from new run")
+
+    ratios = {k: new[k] / base[k] for k in common if base[k] > 0}
+    if args.no_normalize:
+        scale = 1.0
+    elif new_ref and base_ref:
+        scale = new_ref / base_ref
+        print(f"machine-speed reference ({REFERENCE_TABLE}/"
+              f"{REFERENCE_PREFIX}*): {base_ref:.1f}us -> {new_ref:.1f}us")
+    else:
+        scale = statistics.median(ratios.values())
+        print("WARN: no xla reference row in both files; normalizing by "
+              "the median compared ratio (blind to regressions hitting "
+              "most rows)")
+    bad = []
+    for key, ratio in sorted(ratios.items()):
+        norm = ratio / scale
+        flag = "REGRESSED" if norm > 1.0 + args.rtol else "ok"
+        print(f"{flag:9s} {key[0]}/{key[1]}: {base[key]:.1f}us -> "
+              f"{new[key]:.1f}us (x{ratio:.2f}, normalized x{norm:.2f})")
+        if norm > 1.0 + args.rtol:
+            bad.append(key)
+    print(f"machine-speed scale: x{scale:.2f} over {len(ratios)} rows "
+          f"(threshold +{args.rtol:.0%})")
+    if bad:
+        print(f"FAIL: {len(bad)} tuned-GEMM row(s) regressed beyond "
+              f"+{args.rtol:.0%}: {['/'.join(k) for k in bad]}",
+              file=sys.stderr)
+        return 1
+    print("bench regression check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

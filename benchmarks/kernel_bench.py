@@ -6,9 +6,18 @@ cache) and an end-to-end backend A/B of `sa_dot` (xla vs pallas vs emulate).
 Wall times on this CPU container are interpret-mode numbers (the kernels
 target TPU); the point of the table is correctness overhead accounting and
 block-shape behaviour, not absolute speed.
+
+``--json PATH`` additionally writes the rows as a JSON document
+(conventionally ``BENCH_kernels.json``) that CI uploads as an artifact and
+feeds to ``benchmarks/check_bench_regression.py`` against the committed
+``benchmarks/BENCH_baseline.json``; ``--smoke`` is the reduced CI
+configuration (fewer shapes/reps — regenerate the baseline with the same
+flag).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -29,10 +38,12 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def rows():
+def rows(smoke: bool = False):
     rng = np.random.default_rng(0)
     out = []
-    for m, k, n in ((256, 256, 256), (512, 1024, 512)):
+    gemm_shapes = ((256, 256, 256),) if smoke \
+        else ((256, 256, 256), (512, 1024, 512))
+    for m, k, n in gemm_shapes:
         a = jnp.asarray(quantize_np(rng.standard_normal((m, k)), BF16),
                         jnp.bfloat16)
         w = jnp.asarray(quantize_np(rng.standard_normal((k, n)), BF16),
@@ -66,16 +77,16 @@ def rows():
     us = _time(lambda x: ops.quantize_fp8(x, s, "fp8_e4m3", interpret=True), x)
     out.append({"table": "kernel", "name": "quantize_fp8_e4m3_262k",
                 "us_per_call": round(us, 1)})
-    out.extend(autotune_rows())
-    out.extend(decode_rows())
+    out.extend(autotune_rows(smoke))
+    out.extend(decode_rows(smoke))
     out.extend(backend_rows(rng))
     return out
 
 
-def _tuned_row(table, m, k, n, dtype):
+def _tuned_row(table, m, k, n, dtype, reps=2):
     """Sweep one GEMM shape; report tuned vs heuristic-default blocks."""
     default = autotune.default_blocks(m, n, k)
-    best, sweep = autotune.tune(m, n, k, dtype=dtype, reps=2)
+    best, sweep = autotune.tune(m, n, k, dtype=dtype, reps=reps)
     by_blocks = {tuple(r["blocks"]): r["us"] for r in sweep}
     return {"table": table, "name": f"sa_matmul_{m}x{k}x{n}",
             "default_blocks": "x".join(map(str, default)),
@@ -85,20 +96,20 @@ def _tuned_row(table, m, k, n, dtype):
             "candidates": len(sweep)}
 
 
-def autotune_rows():
+def autotune_rows(smoke: bool = False):
     """Sweep block shapes per GEMM shape; the winners land in the JSON cache
     (`autotune.cache_path()`), so later processes start tuned."""
     dtype = autotune.production_dtype()
-    out = [_tuned_row("autotune", m, k, n, dtype)
-           for m, k, n in ((256, 256, 256), (512, 1024, 512),
-                           (384, 256, 640))]
+    shapes = ((256, 256, 256),) if smoke \
+        else ((256, 256, 256), (512, 1024, 512), (384, 256, 640))
+    out = [_tuned_row("autotune", m, k, n, dtype) for m, k, n in shapes]
     out.append({"table": "autotune", "name": "cache",
                 "path": autotune.cache_path(),
                 "backend": autotune.backend_key()})
     return out
 
 
-def decode_rows():
+def decode_rows(smoke: bool = False):
     """Decode-shape GEMVs (M ∈ {1, 4, 8}): the per-token serving regime.
 
     `clip_blocks` rounds these M up to one 16-sublane tile, so the sweep is
@@ -106,7 +117,8 @@ def decode_rows():
     the same JSON cache the engine's decode step reads."""
     dtype = autotune.production_dtype()
     n, k = 512, 256
-    return [_tuned_row("decode", m, k, n, dtype) for m in (1, 4, 8)]
+    ms = (1, 4) if smoke else (1, 4, 8)
+    return [_tuned_row("decode", m, k, n, dtype) for m in ms]
 
 
 def backend_rows(rng):
@@ -135,9 +147,27 @@ def backend_rows(rng):
     return out
 
 
-def main():
-    for r in rows():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (e.g. BENCH_kernels.json) "
+                         "for CI artifacts / the regression checker")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI configuration: fewer shapes and decode "
+                         "Ms (baseline must be generated with the same flag)")
+    args = ap.parse_args(argv)
+    out = rows(smoke=args.smoke)
+    for r in out:
         print(",".join(f"{k}={v}" for k, v in r.items()))
+    if args.json:
+        payload = {"version": 1, "smoke": args.smoke,
+                   "backend": autotune.backend_key(),
+                   "dtype": autotune.production_dtype(),
+                   "jax": jax.__version__, "rows": out}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {args.json} ({len(out)} rows)")
+    return out
 
 
 if __name__ == "__main__":

@@ -291,7 +291,6 @@ beyond-paper fixes recover: −51 % compiled FLOPs (phi3-class archs),
 def main():
     base = load(BASE)
     opt = load(OPT)
-    hc = load(HC)
     mb = E.network_totals("mobilenet")
     rn = E.network_totals("resnet50")
     n_ok = sum(1 for r in base.values() if r["status"] == "ok")

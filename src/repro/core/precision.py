@@ -25,7 +25,6 @@ paper's single rounder sits.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -94,12 +94,15 @@ def memory_dict(compiled) -> dict:
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
-             keep_text: bool = False, accum: int | None = None) -> dict:
+             keep_text: bool = False, accum: int | None = None,
+             kv: str = "ring") -> dict:
     cfg = get_config(arch)
     shape = SHAPES_BY_NAME[shape_name]
     ok, why = SP.cell_is_applicable(cfg, shape)
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
            "family": cfg.family, "params": cfg.param_count()}
+    if kv != "ring":
+        rec["kv_layout"] = kv
     if not ok:
         rec |= {"status": "skipped", "reason": why}
         return rec
@@ -109,7 +112,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         from repro.parallel.sharding import set_active_mesh
         set_active_mesh(mesh)   # activation constraints inside model code
         step_fn, args, in_sh, out_sh = SP.input_specs(cfg, shape, mesh,
-                                                      accum=accum)
+                                                      accum=accum,
+                                                      kv_layout=kv)
         # donation mirrors production: train donates the state, serving
         # donates the KV/SSM cache (in-place update on device)
         donate = (0,) if shape.kind == "train" else (2,)
@@ -152,9 +156,12 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     return rec
 
 
-def cell_path(arch: str, shape: str, mesh: str) -> str:
+def cell_path(arch: str, shape: str, mesh: str, kv: str = "ring") -> str:
+    """Non-default KV layouts get their own artifact namespace so a paged
+    sweep never collides with (or --resume-skips into) the ring records."""
     os.makedirs(ART_DIR, exist_ok=True)
-    return os.path.join(ART_DIR, f"{arch}__{shape}__{mesh}.json")
+    suffix = "" if kv == "ring" else f"__kv-{kv}"
+    return os.path.join(ART_DIR, f"{arch}__{shape}__{mesh}{suffix}.json")
 
 
 def main():
@@ -167,6 +174,9 @@ def main():
                     help="skip cells whose artifact already exists")
     ap.add_argument("--accum", type=int, default=None,
                     help="override gradient-accumulation microsteps")
+    ap.add_argument("--kv", default="ring", choices=("ring", "paged"),
+                    help="KV layout for decode cells: per-slot dense rings "
+                         "or the paged pool + block table (DESIGN.md §5)")
     args = ap.parse_args()
 
     # lower the TPU-true program (bf16 containers), not the CPU-exec variant
@@ -179,13 +189,14 @@ def main():
     for arch in archs:
         for shape in shapes:
             for mesh_kind in meshes:
-                path = cell_path(arch, shape, mesh_kind)
+                path = cell_path(arch, shape, mesh_kind, kv=args.kv)
                 if args.resume and os.path.exists(path):
                     with open(path) as f:
                         old = json.load(f)
                     if old.get("status") in ("ok", "skipped"):
                         continue
-                rec = run_cell(arch, shape, mesh_kind, accum=args.accum)
+                rec = run_cell(arch, shape, mesh_kind, accum=args.accum,
+                               kv=args.kv)
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)
                 status = rec["status"]

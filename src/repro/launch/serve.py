@@ -66,7 +66,10 @@ def serve_continuous(args, cfg, params, plens) -> dict:
     if args.autotune_decode:
         preseed_decode_blocks(cfg, args.batch)
     engine = ServeEngine(cfg, params, args.batch, args.cache_len,
-                         eos_id=args.eos_id, sync_every=args.sync_every)
+                         eos_id=args.eos_id, sync_every=args.sync_every,
+                         kv_layout=args.kv, page_size=args.page_size,
+                         pool_pages=args.pool_pages,
+                         max_seq_len=args.max_seq_len)
     sched = SlotScheduler(args.batch, eos_id=args.eos_id)
     build_requests(sched, cfg, args.requests, args.rate, plens,
                    args.max_new, args.seed)
@@ -133,6 +136,20 @@ def main(argv=None):
                     help="comma-set of prompt lengths, cycled per request")
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--cache-len", type=int, default=None)
+    ap.add_argument("--kv", default=None, choices=(None, "ring", "paged"),
+                    help="KV layout (default: $REPRO_KV or 'paged'): "
+                         "'paged' pools pages across slots with per-slot "
+                         "block tables; 'ring' is the per-slot dense "
+                         "fallback (DESIGN.md §5)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged layout)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="total pages in the pool (default: dense-ring-"
+                         "equivalent batch*cache_len tokens + trash page)")
+    ap.add_argument("--max-seq-len", type=int, default=None,
+                    help="per-request token cap = block-table width "
+                         "(default: cache-len) — raise it to admit one "
+                         "long request without growing every slot")
     ap.add_argument("--sync-every", type=int, default=8,
                     help="decode steps per host sync / scheduler tick")
     ap.add_argument("--eos-id", type=int, default=-1,

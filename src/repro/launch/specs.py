@@ -7,9 +7,6 @@ anywhere (the dry-run contract).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -46,9 +43,30 @@ def _frontend_spec(cfg: ArchConfig, batch: int):
     return None
 
 
+DEFAULT_PAGE_SIZE = 64
+
+
+def pool_pages_for(mesh: Mesh, batch: int, seq_len: int,
+                   page_size: int) -> int:
+    """Page-pool size for a decode cell: dense-ring-equivalent capacity
+    plus the trash page, rounded up so the page dim splits evenly over the
+    DP axes (explicit shardings replicate dims they don't divide)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = 1
+    for a in S.batch_axes(mesh):
+        dp *= sizes[a]
+    n = -(-batch * seq_len // page_size) + 1
+    return -(-n // dp) * dp
+
+
 def input_specs(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh,
-                accum: int | None = None):
-    """→ (step_fn, abstract_args: tuple, in_shardings, out_shardings)."""
+                accum: int | None = None, kv_layout: str = "ring",
+                page_size: int = DEFAULT_PAGE_SIZE):
+    """→ (step_fn, abstract_args: tuple, in_shardings, out_shardings).
+
+    `kv_layout="paged"` lowers decode cells against the paged KV pool
+    (global page pool + block table, pages sharded over the data axes —
+    parallel/sharding.cache_specs) instead of per-slot dense rings."""
     GB, T = shape.global_batch, shape.seq_len
     repl = NamedSharding(mesh, P())
 
@@ -77,8 +95,13 @@ def input_specs(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh,
     params = M.abstract_params(cfg, dtype=jnp.bfloat16)
     pshard = S.param_shardings(cfg, params, mesh)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if kv_layout not in ("ring", "paged"):
+        raise ValueError(f"kv_layout={kv_layout!r}; want 'ring' or 'paged'")
+    paged = None
+    if kv_layout == "paged" and shape.kind == "decode":
+        paged = (pool_pages_for(mesh, GB, T, page_size), page_size)
     cache = M.init_cache(cfg, GB, T, dtype=jnp.bfloat16, abstract=True,
-                         kv_pad_to=sizes.get("model", 1))
+                         kv_pad_to=sizes.get("model", 1), paged=paged)
     cshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
                           S.cache_specs(cfg, cache, mesh, GB))
     fe = _frontend_spec(cfg, GB)

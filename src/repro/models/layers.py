@@ -31,7 +31,8 @@ def layernorm(x, w, b, eps=1e-5):
     x32 = x.astype(jnp.float32)
     mu = jnp.mean(x32, axis=-1, keepdims=True)
     var = jnp.var(x32, axis=-1, keepdims=True)
-    y = (x32 - mu) * lax.rsqrt(var + eps) * w.astype(jnp.float32) + b.astype(jnp.float32)
+    y = (x32 - mu) * lax.rsqrt(var + eps) * w.astype(jnp.float32) \
+        + b.astype(jnp.float32)
     return y.astype(x.dtype)
 
 
@@ -306,6 +307,45 @@ class KVCache(NamedTuple):
     positions: jax.Array  # (B, S_cache) int32 per-slot positions, -1 = empty
 
 
+class PagedKVCache(NamedTuple):
+    """Paged KV layout: a global page pool shared by every batch slot.
+
+    Slots own whole pages via `block_table`; a short request maps few pages
+    while a long neighbour maps many — capacity is pooled instead of each
+    slot owning a full fixed-length ring (DESIGN.md §5). Page 0 is the
+    reserved *trash* page: decode writes from slots with no mapped page for
+    their current position (free / just-retired slots keep decoding until
+    the next scheduler tick) land there, and it is never handed out by the
+    allocator, so a stale write can never corrupt a live request.
+    """
+    k: jax.Array            # (n_pages, page_size, KVH, hd)
+    v: jax.Array
+    positions: jax.Array    # (n_pages, page_size) int32, -1 = empty
+    block_table: jax.Array  # (B, max_pages) int32 page ids, -1 = unmapped
+
+
+def gather_pages(cache: PagedKVCache):
+    """Gather each slot's mapped pages into a virtually-contiguous view.
+
+    Returns (k, v, positions) shaped like a dense per-slot cache of length
+    S = max_pages·page_size, so `decode_attention` runs unchanged on top.
+    Unmapped block-table entries gather the trash page; their k/v are
+    zeroed (a free slot's garbage row can carry NaNs — and 0·NaN = NaN
+    would leak through the masked softmax) and positions forced to -1, so
+    they are masked out exactly like empty dense-ring entries.
+    """
+    B, P = cache.block_table.shape
+    psz = cache.k.shape[1]
+    safe = jnp.maximum(cache.block_table, 0)              # (B, P)
+    mapped = (cache.block_table >= 0)[:, :, None]         # (B, P, 1)
+    kvhd = cache.k.shape[2:]
+    k = jnp.where(mapped[..., None, None], cache.k[safe], 0)
+    v = jnp.where(mapped[..., None, None], cache.v[safe], 0)
+    pos = jnp.where(mapped, cache.positions[safe], -1)
+    return (k.reshape(B, P * psz, *kvhd), v.reshape(B, P * psz, *kvhd),
+            pos.reshape(B, P * psz))
+
+
 def qkv_project(x, p, cfg, meta):
     """x: (B, T, D) → q (B,T,H,hd), k/v (B,T,KVH,hd)."""
     B, T, _ = x.shape
@@ -401,7 +441,32 @@ def attention_block(x, p, cfg, meta, positions, cache: KVCache | None = None,
         k = S_.constrain(k, "batch", None, "model", None)
         v = S_.constrain(v, "batch", None, "model", None)
     new_cache = None
-    if cache is not None and x.shape[1] == 1:
+    if cache is not None and x.shape[1] == 1 \
+            and isinstance(cache, PagedKVCache):
+        # paged write: position p of slot b lives at offset p % page_size of
+        # page block_table[b, p // page_size]. Rows whose position falls
+        # outside their mapped pages (free slots, post-retirement steps
+        # inside a chunk) write to the reserved trash page 0 instead —
+        # never to a page another request owns.
+        B = x.shape[0]
+        psz = cache.k.shape[1]
+        P = cache.block_table.shape[1]
+        page_i = (pos // psz).astype(jnp.int32)         # (B,)
+        off = (pos % psz).astype(jnp.int32)
+        b = jnp.arange(B)
+        pid = cache.block_table[b, jnp.clip(page_i, 0, P - 1)]
+        pid = jnp.where((page_i < P) & (pid >= 0), pid, 0)
+        k_c = cache.k.at[pid, off].set(k[:, 0].astype(cache.k.dtype))
+        v_c = cache.v.at[pid, off].set(v[:, 0].astype(cache.v.dtype))
+        pos_c = cache.positions.at[pid, off].set(pos.astype(jnp.int32))
+        new_cache = PagedKVCache(k_c, v_c, pos_c, cache.block_table)
+        # attention gathers over the slot's mapped pages only; page order in
+        # the block table is allocation order == sequence order, so the
+        # gathered view is position-sorted exactly like a non-wrapped ring
+        k_g, v_g, pos_g = gather_pages(new_cache)
+        o = decode_attention(q, k_g, v_g, pos_g, pos, window=window,
+                             cap=cfg.attn_softcap)
+    elif cache is not None and x.shape[1] == 1:
         # per-slot ring write: row b of the batch is an independent request
         # at its own depth, so each row scatters into its own ring slot
         B = x.shape[0]
@@ -429,6 +494,13 @@ def attention_block(x, p, cfg, meta, positions, cache: KVCache | None = None,
             o = blockwise_attention(q, k, v, causal=causal, window=window,
                                     cap=cfg.attn_softcap)
         if cache is not None:            # prefill: fill the cache
+            if isinstance(cache, PagedKVCache):
+                # the serve engine prefills a dense batch-1 fragment and
+                # page-scatters it into the pool (engine._insert); a direct
+                # multi-token forward over the pool has no defined slot
+                raise ValueError(
+                    "paged KV caches take prefill via the engine's fragment "
+                    "splice, not a multi-token forward")
             S = cache.k.shape[1]
             T = k.shape[1]
             k = k.astype(cache.k.dtype)

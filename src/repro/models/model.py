@@ -171,7 +171,8 @@ def abstract_params(cfg: ArchConfig, dtype=jnp.float32):
 
 def init_cache(cfg: ArchConfig, batch: int, seq_len: int,
                dtype=jnp.bfloat16, abstract: bool = False,
-               kv_pad_to: int = 1):
+               kv_pad_to: int = 1,
+               paged: tuple[int, int] | None = None):
     """Stacked per-layer cache. Local layers get ring buffers of `window`.
 
     Every leaf carries the batch dimension at axis 1 (after the stacked
@@ -180,8 +181,17 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int,
     every leaf with a single dynamic-update-slice (continuous batching).
 
     `kv_pad_to`: TP axis size — KV heads padded up so the cache shards over
-    the model axis without per-step resharding (optflags: pad_kv_heads)."""
-    from repro.models.layers import padded_kvh
+    the model axis without per-step resharding (optflags: pad_kv_heads).
+
+    `paged`: `(n_pages, page_size)` — global-attention layers become a
+    shared `PagedKVCache` page pool plus a per-slot block table instead of
+    per-slot rings (DESIGN.md §5). `seq_len` then caps a single request
+    (`max_pages = ceil(seq_len / page_size)` block-table columns) while
+    total capacity is the pool's `n_pages · page_size` tokens, shared
+    across slots. Local-window layers keep their dense rings (already
+    bounded by `window`, they never strand capacity) and SSM/conv state
+    stays per-slot, so the engine's fragment splice handles mixed leaves."""
+    from repro.models.layers import PagedKVCache, padded_kvh
     period = cfg.stack_period
     n_super = cfg.num_layers // period
     kvh = padded_kvh(cfg.num_kv_heads, kv_pad_to)
@@ -196,10 +206,22 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int,
         c = {}
         if cfg.family != "ssm":
             S = min(cfg.window, seq_len) if meta["attn"] == "local" else seq_len
-            c["kv"] = KVCache(
-                k=mk((n_super, batch, S, kvh, cfg.hd)),
-                v=mk((n_super, batch, S, kvh, cfg.hd)),
-                positions=mk((n_super, batch, S), jnp.int32, -1))
+            if paged is not None and not (meta["attn"] == "local"
+                                          and cfg.window
+                                          and cfg.window < seq_len):
+                n_pages, psz = paged
+                max_pages = -(-seq_len // psz)
+                c["kv"] = PagedKVCache(
+                    k=mk((n_super, n_pages, psz, kvh, cfg.hd)),
+                    v=mk((n_super, n_pages, psz, kvh, cfg.hd)),
+                    positions=mk((n_super, n_pages, psz), jnp.int32, -1),
+                    block_table=mk((n_super, batch, max_pages),
+                                   jnp.int32, -1))
+            else:
+                c["kv"] = KVCache(
+                    k=mk((n_super, batch, S, kvh, cfg.hd)),
+                    v=mk((n_super, batch, S, kvh, cfg.hd)),
+                    positions=mk((n_super, batch, S), jnp.int32, -1))
         if cfg.family == "ssm" or cfg.hybrid:
             c["ssm"] = (
                 mk((n_super, batch, cfg.n_ssm_heads, cfg.ssm_head_dim,
@@ -347,7 +369,6 @@ def forward(params, cfg: ArchConfig, tokens, *, positions=None, cache=None,
             positions = jnp.broadcast_to(jnp.arange(T), (B, T))
 
     period = cfg.stack_period
-    aux_losses = []
 
     def superblock(x, xs):
         p_sb, cache_sb = xs

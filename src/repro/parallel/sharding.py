@@ -187,7 +187,12 @@ def cache_specs(cfg: ArchConfig, cache_tree: Any, mesh: Mesh, batch: int):
 
     Batch-shardable cells shard batch over DP axes; the `long_500k` cell
     (batch=1) shards the KV *sequence* dim over `data` instead (sequence
-    parallelism for the long-context cache).
+    parallelism for the long-context cache). Paged pools
+    (models.layers.PagedKVCache) shard their *page* dim over the DP axes —
+    pages have no batch affinity, so the pool distributes like sequence
+    parallelism regardless of batch — with KV heads over `model` exactly
+    like dense rings; the per-slot block table is tiny and replicated
+    (every page shard needs the full slot→page map to resolve gathers).
     """
     ba = batch_axes(mesh)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -211,7 +216,23 @@ def cache_specs(cfg: ArchConfig, cache_tree: Any, mesh: Mesh, batch: int):
         return P(*(a if d % axis_size(a) == 0 else None
                    for a, d in zip(tuple(spec), shape)))
 
+    def kv_head_specs(kvh: int):
+        """Padded caches shard on heads (matches the attention compute —
+        no per-step reshard); unpadded fall back to the head *dim*."""
+        if kvh % sizes_all.get("model", 1) == 0:
+            return "model", None
+        return None, "model"
+
     def spec_for(path, leaf):
+        from repro.models.layers import PagedKVCache
+        if isinstance(leaf, PagedKVCache):
+            kv_spec, hd_spec = kv_head_specs(leaf.k.shape[3])
+            pool = P(None, ba, None, kv_spec, hd_spec)
+            return PagedKVCache(
+                k=fit(pool, leaf.k.shape),
+                v=fit(pool, leaf.v.shape),
+                positions=fit(P(None, ba, None), leaf.positions.shape),
+                block_table=P(None, None, None))
         ps = _path_str(path)
         nd = len(leaf.shape)
         if ps.endswith("positions"):
@@ -231,21 +252,17 @@ def cache_specs(cfg: ArchConfig, cache_tree: Any, mesh: Mesh, batch: int):
                            leaf.shape)
             return P(*([None] * nd))
         if nd == 5:       # k/v: (n_super, B, S, KVH, hd)
-            kvh = leaf.shape[3]
-            model_n = sizes_all.get("model", 1)
-            # padded caches shard on heads (matches the attention compute —
-            # no per-step reshard); unpadded fall back to the head *dim*
-            if kvh % model_n == 0:
-                kv_spec, hd_spec = "model", None
-            else:
-                kv_spec, hd_spec = None, "model"
+            kv_spec, hd_spec = kv_head_specs(leaf.shape[3])
             if batch_ok:
                 return fit(P(None, ba, None, kv_spec, hd_spec), leaf.shape)
             # long-context: sequence parallelism over `data`
             return fit(P(None, None, "data", kv_spec, hd_spec), leaf.shape)
         return P(*([None] * nd))
 
-    return jax.tree_util.tree_map_with_path(spec_for, cache_tree)
+    from repro.models.layers import PagedKVCache
+    return jax.tree_util.tree_map_with_path(
+        spec_for, cache_tree,
+        is_leaf=lambda x: isinstance(x, PagedKVCache))
 
 
 def activation_spec(mesh: Mesh, batch: int):

@@ -21,9 +21,18 @@ Architecture (DESIGN.md §Serving):
   should quantize prompt lengths to a small set. Right-padding prompts
   instead would corrupt SSM/hybrid states (padded tokens update the
   recurrence), so exact-length prefill is the correctness-first default.
+* **Paged KV (default)** — under ``REPRO_KV=paged`` (the default; ``ring``
+  is the A/B fallback) `serve()` replaces the per-slot fixed rings with a
+  global page pool + per-slot block tables (DESIGN.md §5): the scheduler's
+  `PageAllocator` hands pages out at admission and takes them back at
+  retirement, so a long prompt can map many pages while short neighbours
+  map few, and admission is gated on free *pages*, not free slots. The
+  prefill fragment stays dense; `_insert` page-scatters it into the pool.
+  `generate()` (static batches, frontend archs) always uses dense rings.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Any
 
@@ -34,14 +43,29 @@ from jax import lax
 
 from repro.models.config import ArchConfig
 from repro.models import model as M
+from repro.models.layers import KVCache, PagedKVCache
 from repro.train.step import make_prefill_step, make_serve_step
-from .scheduler import SlotScheduler
+from .scheduler import PageAllocator, SlotScheduler
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-int(x) // m) * m
 
 
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params: Any, batch: int,
                  cache_len: int, eos_id: int = 2, cache_dtype=jnp.float32,
-                 sync_every: int = 8):
+                 sync_every: int = 8, kv_layout: str | None = None,
+                 page_size: int = 16, pool_pages: int | None = None,
+                 max_seq_len: int | None = None):
+        """`cache_len` is the per-request capacity of the ring layout and
+        the pool-sizing reference of the paged one: by default the pool
+        holds the same `batch · cache_len` tokens (plus the trash page) a
+        dense ring allocation would, while `max_seq_len` (default
+        `cache_len`, rounded up to a page) caps a single request and
+        `pool_pages` overrides total pool size — so a paged engine can
+        admit one long request beyond `cache_len` without paying dense
+        rings of that length in every slot."""
         self.cfg = cfg
         self.params = params
         self.batch = batch
@@ -49,30 +73,136 @@ class ServeEngine:
         self.eos_id = eos_id
         self.cache_dtype = cache_dtype
         self.sync_every = max(1, int(sync_every))
+        kv_layout = kv_layout or os.environ.get("REPRO_KV", "paged")
+        if kv_layout not in ("ring", "paged"):
+            raise ValueError(
+                f"REPRO_KV/kv_layout={kv_layout!r}; want 'ring' or 'paged'")
+        if cfg.family == "ssm":
+            kv_layout = "ring"   # no KV to page; SSM state is O(1) per slot
+        self.kv_layout = kv_layout
+        self.page_size = int(page_size)
+        self.max_seq_len = _round_up(max_seq_len or cache_len, self.page_size)
+        self.max_pages = self.max_seq_len // self.page_size
+        self.pool_pages = int(
+            pool_pages
+            or _round_up(batch * cache_len, self.page_size) // self.page_size
+            + 1)                 # +1: the reserved trash page
+        # local-window rings survive in the paged layout (bounded by
+        # `window`, they never strand capacity); the dense prefill fragment
+        # must carry rings of the same length, so fragments are floored at
+        # `window` tokens (and page allocations cover that floor)
+        has_local = cfg.family != "ssm" and any(
+            cfg.layer_kind(j).get("attn") == "local"
+            for j in range(cfg.stack_period))
+        self._frag_floor = (cfg.window if has_local and cfg.window
+                            and cfg.window < self.max_seq_len else 1)
         self._prefill = jax.jit(make_prefill_step(cfg))
         self._serve_step = make_serve_step(cfg)
         self._chunks: dict[tuple[int, bool], Any] = {}
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        self._clear_slot = jax.jit(self._clear_slot_impl, donate_argnums=(0,))
         self.last_stats: dict[str, float] = {}
 
     def new_cache(self, batch: int | None = None):
         return M.init_cache(self.cfg, batch or self.batch, self.cache_len,
                             dtype=self.cache_dtype)
 
+    def new_pool(self):
+        """Paged serve cache: global page pools + per-slot block tables."""
+        return M.init_cache(self.cfg, self.batch, self.max_seq_len,
+                            dtype=self.cache_dtype,
+                            paged=(self.pool_pages, self.page_size))
+
+    def new_frag(self, prompt_len: int):
+        """Dense batch-1 prefill fragment sized for one paged admission:
+        the prompt rounded up to whole pages (and floored at `window` so
+        local-ring leaves match the pool's)."""
+        cap = _round_up(max(prompt_len, self._frag_floor), self.page_size)
+        return M.init_cache(self.cfg, 1, cap, dtype=self.cache_dtype)
+
+    def new_allocator(self) -> PageAllocator:
+        return PageAllocator(
+            self.pool_pages, self.page_size,
+            max_request_pages=self.max_pages,
+            min_request_tokens=self._frag_floor)
+
     # ------------------------------------------------------------------
     # jitted building blocks
     # ------------------------------------------------------------------
 
     @staticmethod
-    def _insert_impl(cache, frag, slot):
+    def _insert_impl(cache, frag, slot, block_row=None):
         """Splice a batch-1 cache fragment into batch row `slot`.
 
-        Every cache leaf carries batch at axis 1 (model.init_cache), so one
-        tree-wide dynamic-update-slice replaces the slot's KV rows, per-slot
-        positions, and SSM/conv state in a single donated dispatch."""
+        Dense leaves (rings, SSM/conv state, per-slot positions) carry
+        batch at axis 1 (model.init_cache) and take a dynamic-update-slice.
+        Paged pool leaves take the page scatter instead: the fragment's
+        rows land at flat offsets `block_row[t // psz] · psz + t % psz`,
+        after wiping the positions of *every* page in `block_row` to -1 —
+        recycled pages still hold the previous owner's positions, which
+        would otherwise be visible to the attention mask. `block_row` is
+        the slot's (max_pages,) block-table row, -1-padded."""
+        def splice(full, one):
+            if isinstance(full, PagedKVCache):
+                n_super, n_pages, psz = full.k.shape[:3]
+                s_frag = one.k.shape[2]
+                npp = s_frag // psz
+                lane = jnp.arange(psz, dtype=jnp.int32)
+                dest = (block_row[:npp, None] * psz + lane).reshape(-1)
+                wipe = (jnp.where(block_row >= 0, block_row, 0)[:, None]
+                        * psz + lane).reshape(-1)   # page 0 wipe: harmless
+                kf = full.k.reshape(n_super, n_pages * psz, *full.k.shape[3:])
+                vf = full.v.reshape(n_super, n_pages * psz, *full.v.shape[3:])
+                pf = full.positions.reshape(n_super, n_pages * psz)
+                kf = kf.at[:, dest].set(one.k[:, 0].astype(kf.dtype))
+                vf = vf.at[:, dest].set(one.v[:, 0].astype(vf.dtype))
+                pf = pf.at[:, wipe].set(-1)
+                pf = pf.at[:, dest].set(one.positions[:, 0])
+                bt = lax.dynamic_update_slice_in_dim(
+                    full.block_table,
+                    jnp.broadcast_to(block_row,
+                                     (n_super, 1, block_row.shape[0])),
+                    slot, axis=1)
+                return PagedKVCache(kf.reshape(full.k.shape),
+                                    vf.reshape(full.v.shape),
+                                    pf.reshape(full.positions.shape), bt)
+            if isinstance(full, KVCache):
+                return KVCache(*(lax.dynamic_update_slice_in_dim(
+                    f, o.astype(f.dtype), slot, axis=1)
+                    for f, o in zip(full, one)))
+            return lax.dynamic_update_slice_in_dim(
+                full, one.astype(full.dtype), slot, axis=1)
+
         return jax.tree.map(
-            lambda full, one: lax.dynamic_update_slice_in_dim(
-                full, one.astype(full.dtype), slot, axis=1), cache, frag)
+            splice, cache, frag,
+            is_leaf=lambda x: isinstance(x, (KVCache, PagedKVCache)))
+
+    @staticmethod
+    def _clear_slot_impl(cache, slot):
+        """Unmap a freed slot's block-table rows (set to -1) so its decode
+        writes fall to the trash page before the pages are reallocated."""
+        def clear(leaf):
+            if not isinstance(leaf, PagedKVCache):
+                return leaf
+            bt = leaf.block_table
+            row = jnp.full((bt.shape[0], 1, bt.shape[2]), -1, bt.dtype)
+            return leaf._replace(block_table=lax.dynamic_update_slice_in_dim(
+                bt, row, slot, axis=1))
+        return jax.tree.map(
+            clear, cache,
+            is_leaf=lambda x: isinstance(x, (KVCache, PagedKVCache)))
+
+    def _must_reject(self, req) -> bool:
+        """A just-admitted request the engine cannot serve.
+
+        Paged: the allocator marked it unallocatable (more pages than the
+        pool or the per-request block table holds). Ring: prompt + budget
+        would wrap a global-attention ring (local windows and SSM state
+        are the only wrap-safe caches)."""
+        if self.kv_layout == "paged":
+            return req.pages is None
+        return (self.cfg.family != "ssm"
+                and req.prompt_len + req.max_new_tokens > self.cache_len)
 
     def _chunk_fn(self, steps: int, greedy: bool):
         """steps decode iterations in one device-side lax.scan.
@@ -163,34 +293,51 @@ class ServeEngine:
                 "continuous serving is text-only (per-slot frontends are a "
                 "ROADMAP item); use ServeEngine.generate for frontend archs")
         B = self.batch
+        paged = self.kv_layout == "paged"
+        if paged and scheduler.pages is None:
+            scheduler.pages = self.new_allocator()
         rng = rng if rng is not None else jax.random.key(0)
         t0 = clock()
         skew = 0.0          # engine-time fast-forward for frozen clocks
 
         def now():
             return clock() - t0 + skew
-        cache = self.new_cache()
+        cache = self.new_pool() if paged else self.new_cache()
         tok = jnp.zeros((B,), jnp.int32)
         pos = jnp.zeros((B,), jnp.int32)
         prefill_s = decode_s = 0.0
 
+        def clear_freed():
+            # retirement freed the slot's pages; unmap its block-table rows
+            # *before* the pages can be handed to a new admission, or the
+            # stale slot's decode writes would corrupt the new owner (they
+            # fall to the trash page once unmapped). Runs before admissions
+            # (observe-retired slots) and again after them (a request whose
+            # first token already finished it frees pages mid-admission;
+            # its slot cannot be refilled within the same pass, so clearing
+            # here never wipes a live row).
+            nonlocal cache
+            for freed in scheduler.drain_freed():
+                cache = self._clear_slot(cache, freed)
+
         while not scheduler.drained():
+            if paged:
+                clear_freed()
             for slot in scheduler.free_slots():
                 req = scheduler.admit(slot, now())
                 if req is None:
                     break
-                if (self.cfg.family != "ssm"
-                        and req.prompt_len + req.max_new_tokens
-                        > self.cache_len):
-                    # a global-attention KV ring must never wrap: the write
-                    # would overwrite live prompt keys and silently corrupt
-                    # the request (local windows and SSM state are the only
-                    # wrap-safe caches). Retire it as rejected — in-flight
-                    # slots keep decoding.
+                if self._must_reject(req):
+                    # ring: a global-attention KV ring must never wrap (the
+                    # write would overwrite live prompt keys and silently
+                    # corrupt the request). Paged: the allocator found the
+                    # request can never fit the pool / block table. Retire
+                    # it as rejected — in-flight slots keep decoding.
                     scheduler.reject(slot, now())
                     continue
                 t_p = now()
-                frag = self.new_cache(batch=1)
+                frag = (self.new_frag(req.prompt_len) if paged
+                        else self.new_cache(batch=1))
                 logits, frag = self._prefill(
                     self.params, jnp.asarray(req.prompt, jnp.int32)[None],
                     frag, None)
@@ -200,12 +347,20 @@ class ServeEngine:
                     rng, k = jax.random.split(rng)
                     first = int(np.asarray(
                         jax.random.categorical(k, logits[0, -1])))
-                cache = self._insert(cache, frag, slot)
+                if paged:
+                    row = np.full((self.max_pages,), -1, np.int32)
+                    row[:len(req.pages)] = req.pages
+                    cache = self._insert(cache, frag, slot,
+                                         jnp.asarray(row))
+                else:
+                    cache = self._insert(cache, frag, slot)
                 tok = tok.at[slot].set(first)
                 pos = pos.at[slot].set(req.prompt_len)
                 dt = now() - t_p
                 prefill_s += dt
                 scheduler.start(slot, first, now(), prefill_s=dt)
+            if paged:
+                clear_freed()
 
             if scheduler.num_active() == 0:
                 # queue non-empty but nothing has arrived yet: wait for the

@@ -20,6 +20,13 @@ Semantics
   never counted — tok/s reports real generated tokens only.
 * Completion timestamps are quantized to chunk boundaries (the host only
   observes tokens once per chunk); TTFT is exact (prefill is a sync point).
+* With a `PageAllocator` attached (paged KV engines), admission is gated on
+  **free pages, not free slots**: a request needing more pages than are
+  currently free stays queued (head-of-line) until a retirement frees
+  them, and one that can *never* fit (more pages than the pool or the
+  per-request block table holds) is admitted with `pages=None` so the
+  engine retires it as rejected. Pages free on retirement — EOS, budget,
+  or rejection — so the pool can never leak across slot refills.
 """
 from __future__ import annotations
 
@@ -27,6 +34,68 @@ import dataclasses
 from collections import deque
 
 import numpy as np
+
+
+class PageAllocator:
+    """Host-side free list over the global KV page pool.
+
+    Page ids `[reserved, n_pages)` are allocatable; ids below `reserved`
+    (default: page 0, the trash page decode writes of unmapped slots land
+    in — see models/layers.py PagedKVCache) are never handed out.
+    `max_request_pages` caps one request (the device block table's width).
+    """
+
+    def __init__(self, n_pages: int, page_size: int,
+                 max_request_pages: int | None = None, reserved: int = 1,
+                 min_request_tokens: int = 1):
+        assert n_pages > reserved, (n_pages, reserved)
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self.reserved = int(reserved)
+        self.max_request_pages = (self.capacity if max_request_pages is None
+                                  else int(max_request_pages))
+        # floor on a request's token allocation: engines with local-window
+        # rings prefill fragments of at least `window` tokens, so the pages
+        # must cover that floor too (see engine.new_frag)
+        self.min_request_tokens = int(min_request_tokens)
+        self._free = deque(range(reserved, n_pages))
+        self.peak_in_use = 0
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (excludes the reserved trash page)."""
+        return self.n_pages - self.reserved
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.capacity - self.free_pages
+
+    def pages_needed(self, tokens: int) -> int:
+        tokens = max(int(tokens), self.min_request_tokens, 1)
+        return -(-tokens // self.page_size)
+
+    def fits_ever(self, tokens: int) -> bool:
+        """Could this request ever be admitted (given an empty pool)?"""
+        n = self.pages_needed(tokens)
+        return n <= min(self.capacity, self.max_request_pages)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """Pop `n` pages, or None if they aren't free right now."""
+        if n > len(self._free) or n > self.max_request_pages:
+            return None
+        pages = [self._free.popleft() for _ in range(n)]
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return pages
+
+    def free(self, pages: list[int]):
+        for p in pages:
+            assert self.reserved <= p < self.n_pages, p
+        assert not set(pages) & set(self._free), "double free"
+        self._free.extend(pages)
 
 
 @dataclasses.dataclass
@@ -40,6 +109,10 @@ class Request:
     # filled in by the scheduler as the request is served
     tokens: list[int] = dataclasses.field(default_factory=list)
     slot: int = -1
+    # KV pages allocated at admission (paged engines; freed on retirement,
+    # the list is kept as a record). None after admission = could never fit
+    # the pool / block table — the engine retires it as rejected.
+    pages: list[int] | None = None
     t_admitted: float | None = None
     t_first_token: float | None = None   # TTFT reference point
     t_done: float | None = None
@@ -78,15 +151,21 @@ class _Slot:
 class SlotScheduler:
     """Slot table + arrival queue + per-request accounting."""
 
-    def __init__(self, n_slots: int, eos_id: int = 2):
+    def __init__(self, n_slots: int, eos_id: int = 2,
+                 pages: PageAllocator | None = None):
         self.n_slots = n_slots
         self.eos_id = eos_id
+        self.pages = pages        # set by paged engines (serve() injects one)
         self.pending: deque[Request] = deque()
         self.slots = [_Slot() for _ in range(n_slots)]
         self.finished: list[Request] = []
         self.depth_samples: list[int] = []
+        self.page_util_samples: list[float] = []
+        self.page_blocks = 0      # requests that ever waited for free pages
+        self._blocked_rids: set[int] = set()
         self.refills = 0          # admissions into a previously-used slot
         self._slot_used = [False] * n_slots
+        self._freed_slots: list[int] = []
         self._next_rid = 0
 
     # ------------------------------------------------------------------
@@ -116,10 +195,30 @@ class SlotScheduler:
         return self.pending[0].arrival_time if self.pending else None
 
     def admit(self, slot_idx: int, now: float) -> Request | None:
-        """Pop the queue head into `slot_idx` if it has arrived by `now`."""
+        """Pop the queue head into `slot_idx` if it has arrived by `now`.
+
+        With a page allocator attached, admission is additionally gated on
+        free pages: a head request that could fit an empty pool but not the
+        current one stays queued (returns None — the slot idles until a
+        retirement frees pages); one that could never fit is admitted with
+        `pages=None` for the engine to reject."""
         if not self.pending or self.pending[0].arrival_time > now:
             return None
+        if self.pages is not None:
+            head = self.pending[0]
+            tokens = head.prompt_len + head.max_new_tokens
+            fits = self.pages.fits_ever(tokens)
+            needed = self.pages.pages_needed(tokens)
+            if fits and needed > self.pages.free_pages:
+                # count *requests* that waited, not poll attempts — the
+                # loop re-asks every chunk tick while the head is blocked
+                if head.rid not in self._blocked_rids:
+                    self._blocked_rids.add(head.rid)
+                    self.page_blocks += 1
+                return None
         req = self.pending.popleft()
+        if self.pages is not None:
+            req.pages = self.pages.alloc(needed) if fits else None
         req.slot = slot_idx
         req.t_admitted = now
         if self._slot_used[slot_idx]:
@@ -183,6 +282,9 @@ class SlotScheduler:
                     continue
                 self._accept(slot, slot.req, int(chunk_tokens[s, i]), now)
         self.depth_samples.append(len(self.pending))
+        if self.pages is not None and self.pages.capacity:
+            self.page_util_samples.append(
+                self.pages.in_use / self.pages.capacity)
 
     def _accept(self, slot: _Slot, req: Request, token: int, now: float):
         req.tokens.append(token)
@@ -196,6 +298,18 @@ class SlotScheduler:
         req.t_done = now
         self.finished.append(req)
         slot.req = None
+        if self.pages is not None and req.pages:
+            # every retirement path — EOS, budget, rejection — returns the
+            # request's pages; `req.pages` stays as the record of what ran
+            self.pages.free(req.pages)
+        self._freed_slots.append(req.slot)
+
+    def drain_freed(self) -> list[int]:
+        """Slots freed since the last call (any retirement reason). Paged
+        engines use this to clear the freed rows' device block tables
+        before the pages can be reallocated to another slot."""
+        freed, self._freed_slots = self._freed_slots, []
+        return freed
 
     # ------------------------------------------------------------------
     # metrics
@@ -223,4 +337,15 @@ class SlotScheduler:
         rates = [r.decode_tok_s for r in done if r.decode_tok_s]
         if rates:
             out["decode_tok_s_mean_per_req"] = float(np.mean(rates))
+        if self.pages is not None:
+            out |= {
+                "page_size": self.pages.page_size,
+                "pages_total": self.pages.capacity,
+                "pages_peak_in_use": self.pages.peak_in_use,
+                "pages_leaked": self.pages.in_use,   # 0 once drained
+                "page_blocks": self.page_blocks,
+                "page_util_mean": round(float(
+                    np.mean(self.page_util_samples)), 4)
+                if self.page_util_samples else 0.0,
+            }
         return out

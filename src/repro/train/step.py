@@ -10,9 +10,6 @@ by the `decode_*` / `long_*` dry-run cells.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 from jax import lax

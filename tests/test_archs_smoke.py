@@ -26,7 +26,7 @@ def test_reduced_forward_and_train_step(arch):
     toks = jax.random.randint(jax.random.key(1), (B, T), 0, cfg.vocab_size)
     fe = _frontend(cfg, B, jax.random.key(2))
 
-    logits, _, _ = M.forward(init_params := M.init_params(rng, cfg), cfg,
+    logits, _, _ = M.forward(M.init_params(rng, cfg), cfg,
                              toks, frontend_embeds=fe)
     exp_T = T + (cfg.frontend_tokens if cfg.family == "vlm" else 0)
     assert logits.shape == (B, exp_T, cfg.padded_vocab)

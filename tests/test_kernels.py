@@ -1,10 +1,9 @@
 """Pallas kernels vs pure-jnp/numpy oracles (interpret mode on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.fpformats import BF16, FP8_E4M3, quantize_np
+from repro.core.fpformats import BF16, quantize_np
 from repro.kernels import ops, ref
 
 RNG = np.random.default_rng(42)

@@ -98,7 +98,6 @@ def test_rope_rotation_properties():
 @given(st.integers(0, 10_000), st.integers(1, 4))
 def test_router_properties(seed, k):
     E = 8
-    cfg = type("C", (), {"num_experts": E, "experts_per_token": k})
     x = jax.random.normal(jax.random.key(seed), (2, 6, 16))
     w = jax.random.normal(jax.random.key(seed + 1), (16, E)) * 0.1
     combine, aux = MOE.router(x, w, k)

@@ -1,0 +1,335 @@
+"""Paged KV cache: paged ≡ ring parity, pool-gated admission, page
+accounting. The paged layout (DESIGN.md §5) replaces per-slot fixed rings
+with a global page pool + per-slot block tables; these tests pin the two
+layouts to identical tokens and the allocator to leak-free bookkeeping."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PrecisionPolicy, use_policy
+from repro.configs import reduced_config
+from repro.models import model as M
+from repro.models.layers import PagedKVCache, gather_pages
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import PageAllocator, SlotScheduler
+
+FP32 = PrecisionPolicy(input_format="fp32")
+
+
+def _cfg(name="qwen2.5-14b"):
+    return dataclasses.replace(reduced_config(name), remat=False)
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = _cfg()
+    with use_policy(FP32):
+        params = M.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, lens, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n).tolist() for n in lens]
+
+
+def _reference_decode(cfg, params, prompt, n, cache_len=64):
+    prompt_a = jnp.asarray(prompt, jnp.int32)[None]
+    plen = prompt_a.shape[1]
+    cache = M.init_cache(cfg, 1, cache_len, dtype=jnp.float32)
+    logits, cache, _ = M.forward(params, cfg, prompt_a, cache=cache,
+                                 last_only=True)
+    tok = int(np.asarray(jnp.argmax(logits[0, -1])))
+    out = [tok]
+    for i in range(n - 1):
+        logits, cache, _ = M.forward(
+            params, cfg, jnp.asarray([[tok]], jnp.int32), cache=cache,
+            pos=jnp.full((1,), plen + i, jnp.int32))
+        tok = int(np.asarray(jnp.argmax(logits[0, -1])))
+        out.append(tok)
+    return out
+
+
+def _serve(cfg, params, layout, prompts, budgets, eos_id=-1, arrivals=None,
+           clock=None, **engine_kw):
+    engine = ServeEngine(cfg, params, batch=2, cache_len=64, eos_id=eos_id,
+                         sync_every=2, kv_layout=layout, **engine_kw)
+    sched = SlotScheduler(2, eos_id=eos_id)
+    for i, (p, n) in enumerate(zip(prompts, budgets)):
+        t = arrivals[i] if arrivals else 0.0
+        sched.submit(p, max_new_tokens=n, arrival_time=t)
+    kw = {"clock": clock} if clock else {}
+    summary = engine.serve(sched, **kw)
+    return sched, summary
+
+
+def _pool_leaf(cache) -> PagedKVCache:
+    for leaf in jax.tree.leaves(
+            cache, is_leaf=lambda x: isinstance(x, PagedKVCache)):
+        if isinstance(leaf, PagedKVCache):
+            return leaf
+    raise AssertionError("no paged leaf in cache")
+
+
+# ---------------------------------------------------------------------------
+# parity: paged ≡ ring token-for-token
+# ---------------------------------------------------------------------------
+
+def test_paged_matches_ring_under_slot_refill(dense_setup):
+    """Four requests through two slots — refills mid-stream — must produce
+    identical tokens under both KV layouts (and both must match their
+    batch-1 references)."""
+    cfg, params = dense_setup
+    prompts = _prompts(cfg, [5, 9, 7, 11])
+    budgets = [20, 4, 6, 5]
+    with use_policy(FP32):
+        ring, _ = _serve(cfg, params, "ring", prompts, budgets)
+        paged, ps = _serve(cfg, params, "paged", prompts, budgets,
+                           page_size=16)
+        refs = [_reference_decode(cfg, params, p, n)
+                for p, n in zip(prompts, budgets)]
+    ring_by = {r.rid: r for r in ring.finished}
+    paged_by = {r.rid: r for r in paged.finished}
+    assert len(paged_by) == 4
+    for rid, ref in enumerate(refs):
+        assert paged_by[rid].tokens == ring_by[rid].tokens == ref, rid
+        assert paged_by[rid].finish_reason == ring_by[rid].finish_reason
+    assert ps["slot_refills"] >= 2 and ps["pages_leaked"] == 0
+
+
+def test_paged_matches_ring_eos_mid_batch(dense_setup):
+    """EOS fires in one slot mid-chunk; both layouts must truncate at the
+    same token and keep the neighbour slot's stream intact."""
+    cfg, params = dense_setup
+    prompts = _prompts(cfg, [6, 8], seed=3)
+    with use_policy(FP32):
+        probe = _reference_decode(cfg, params, prompts[1], 10)
+        eos = probe[2]
+        ring, _ = _serve(cfg, params, "ring", prompts, [12, 12], eos_id=eos)
+        paged, _ = _serve(cfg, params, "paged", prompts, [12, 12],
+                          eos_id=eos, page_size=16)
+    for rid in (0, 1):
+        ring_r = next(x for x in ring.finished if x.rid == rid)
+        paged_r = next(x for x in paged.finished if x.rid == rid)
+        assert paged_r.tokens == ring_r.tokens
+        assert paged_r.finish_reason == ring_r.finish_reason
+    eos_r = next(x for x in paged.finished if x.rid == 1)
+    assert eos_r.finish_reason == "eos" and eos_r.tokens[-1] == eos
+    assert eos_r.n_generated == 3
+
+
+def test_paged_matches_ring_staggered_arrivals(dense_setup):
+    """Poisson-style staggered arrivals under a frozen clock: the engine's
+    fast-forward admission order must be layout-independent."""
+    cfg, params = dense_setup
+    prompts = _prompts(cfg, [6, 6, 8], seed=11)
+    arrivals = [5.0, 9.0, 9.5]
+    with use_policy(FP32):
+        ring, _ = _serve(cfg, params, "ring", prompts, [3, 3, 4],
+                         arrivals=arrivals, clock=lambda: 0.0)
+        paged, _ = _serve(cfg, params, "paged", prompts, [3, 3, 4],
+                          arrivals=arrivals, clock=lambda: 0.0,
+                          page_size=16)
+    assert {r.rid: r.tokens for r in paged.finished} \
+        == {r.rid: r.tokens for r in ring.finished}
+    assert all(r.ttft == 0.0 for r in paged.finished)
+
+
+def _arch_parity(arch, page_size=8, cache_len=32):
+    """Ring vs paged token parity for one arch (three requests, refill)."""
+    cfg = _cfg(arch)
+    with use_policy(FP32):
+        params = M.init_params(jax.random.key(0), cfg)
+        prompts = _prompts(cfg, [6, 10, 7], seed=2)
+        budgets = [8, 3, 5]
+
+        def run(layout):
+            eng = ServeEngine(cfg, params, batch=2, cache_len=cache_len,
+                              eos_id=-1, sync_every=2, kv_layout=layout,
+                              page_size=page_size)
+            sched = SlotScheduler(2, eos_id=-1)
+            for p, n in zip(prompts, budgets):
+                sched.submit(p, max_new_tokens=n)
+            eng.serve(sched)
+            return {r.rid: r.tokens for r in sched.finished}
+
+        ring, paged = run("ring"), run("paged")
+    assert ring == paged, arch
+
+
+def test_paged_matches_ring_local_window_arch():
+    """gemma3: sliding-window layers keep dense rings inside the paged
+    layout and the prefill fragment is floored at `window` — the mixed
+    paged-pool/dense-ring splice must still match the ring engine
+    token-for-token."""
+    cfg = _cfg("gemma3-12b")
+    assert any(p == "local" for p in cfg.attn_pattern) and cfg.window
+    _arch_parity("gemma3-12b")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["hymba-1.5b", "granite-moe-3b-a800m",
+                                  "mamba2-2.7b"])
+def test_paged_matches_ring_other_archs(arch):
+    """Hybrid (attn∥SSM state splice), MoE (dropless serve dispatch), and
+    pure-SSM (paged degrades to ring: nothing to page) all hold parity."""
+    _arch_parity(arch)
+
+
+# ---------------------------------------------------------------------------
+# capacity: pooled pages beat per-slot rings
+# ---------------------------------------------------------------------------
+
+def test_paged_admits_prompt_beyond_ring_cache_len(dense_setup):
+    """A 20-token prompt (+4 budget) overflows the old per-slot ring of 16
+    and is rejected there; the paged engine admits it against the shared
+    pool — whose total memory stays below the dense allocation a ring
+    engine would need to serve the same request — and reproduces the
+    batch-1 reference decode exactly."""
+    cfg, params = dense_setup
+    long_p, short_p = _prompts(cfg, [20, 6], seed=13)
+    with use_policy(FP32):
+        # ring, cache_len=16: the long request cannot be served
+        eng_r = ServeEngine(cfg, params, batch=2, cache_len=16, eos_id=-1,
+                            sync_every=2, kv_layout="ring")
+        s_r = SlotScheduler(2, eos_id=-1)
+        bad = s_r.submit(long_p, max_new_tokens=4)
+        s_r.submit(short_p, max_new_tokens=2)
+        eng_r.serve(s_r)
+        assert bad.finish_reason == "rejected" and bad.tokens == []
+
+        # paged, same cache_len: per-request cap raised to 32 via the block
+        # table, pool = 5 pages × 8 = 40 token slots (incl. trash page)
+        eng_p = ServeEngine(cfg, params, batch=2, cache_len=16, eos_id=-1,
+                            sync_every=2, kv_layout="paged", page_size=8,
+                            pool_pages=5, max_seq_len=32)
+        s_p = SlotScheduler(2, eos_id=-1)
+        r0 = s_p.submit(long_p, max_new_tokens=4)
+        r1 = s_p.submit(short_p, max_new_tokens=2)
+        summary = eng_p.serve(s_p)
+        ref = _reference_decode(cfg, params, long_p, 4, cache_len=32)
+    assert r0.finish_reason == "length" and r0.tokens == ref
+    assert r1.finish_reason == "length" and len(r1.tokens) == 2
+    # total pool memory < the dense ring allocation that could have served
+    # the 24-token request: 2 slots × 24 = 48 KV entries per layer
+    pool = _pool_leaf(eng_p.new_pool())
+    assert pool.k.shape[1] * pool.k.shape[2] == 40 < 2 * 24
+    assert summary["pages_leaked"] == 0
+
+
+def test_admission_blocked_on_pool_exhaustion_then_unblocked():
+    """Free slot + exhausted pool ⇒ the head request waits; a retirement
+    frees pages and the same request admits. Pure host-side."""
+    pa = PageAllocator(4, page_size=8, max_request_pages=3)   # 3 usable
+    sched = SlotScheduler(2, eos_id=99, pages=pa)
+    r0 = sched.submit([1] * 10, max_new_tokens=6)   # 16 tokens → 2 pages
+    r1 = sched.submit([2] * 10, max_new_tokens=6)   # 2 pages
+    assert sched.admit(0, now=0.0) is r0 and len(r0.pages) == 2
+    assert pa.free_pages == 1
+    # slot 1 is free, but r1's 2 pages aren't: admission defers
+    assert sched.admit(1, now=0.0) is None
+    assert sched.page_blocks == 1 and sched.pending[0] is r1
+    # r0 retires (EOS on its first token) → pages return → r1 admits
+    sched.start(0, first_token=99, now=0.1)
+    assert r0.finish_reason == "eos" and pa.free_pages == 3
+    assert sched.drain_freed() == [0]
+    assert sched.admit(1, now=0.2) is r1 and len(r1.pages) == 2
+    assert pa.free_pages == 1
+
+
+def test_oversized_request_rejected_paged(dense_setup):
+    """More pages than the block table (or pool) can ever hold ⇒ admitted
+    with pages=None and retired as rejected; the batch keeps serving."""
+    cfg, params = dense_setup
+    big, ok = _prompts(cfg, [30, 6], seed=17)
+    with use_policy(FP32):
+        eng = ServeEngine(cfg, params, batch=2, cache_len=16, eos_id=-1,
+                          sync_every=2, kv_layout="paged", page_size=8,
+                          pool_pages=5, max_seq_len=16)   # cap: 2 pages/req
+        sched = SlotScheduler(2, eos_id=-1)
+        bad = sched.submit(big, max_new_tokens=8)     # 38 tokens: never fits
+        good = sched.submit(ok, max_new_tokens=4)     # 10 tokens: 2 pages
+        summary = eng.serve(sched)
+        ref = _reference_decode(cfg, params, ok, 4, cache_len=16)
+    assert bad.finish_reason == "rejected" and bad.tokens == []
+    assert bad.pages is None
+    assert good.tokens == ref
+    assert summary["rejected"] == 1 and summary["pages_leaked"] == 0
+
+
+def test_page_accounting_never_leaks_across_refills(dense_setup):
+    """Many requests churn through few slots on a tight pool; every page
+    must come back — the allocator ends exactly where it started."""
+    cfg, params = dense_setup
+    n_req = 8
+    prompts = _prompts(cfg, [5 + (i % 4) for i in range(n_req)], seed=19)
+    budgets = [2 + (i % 3) for i in range(n_req)]
+    with use_policy(FP32):
+        eng = ServeEngine(cfg, params, batch=2, cache_len=16, eos_id=-1,
+                          sync_every=2, kv_layout="paged", page_size=8,
+                          pool_pages=4)                 # 3 usable pages
+        sched = SlotScheduler(2, eos_id=-1)
+        for p, n in zip(prompts, budgets):
+            sched.submit(p, max_new_tokens=n)
+        summary = eng.serve(sched)
+    pa = sched.pages
+    assert summary["requests"] == n_req and summary["rejected"] == 0
+    assert pa.in_use == 0 and pa.free_pages == pa.capacity
+    assert sorted(pa._free) == list(range(1, 4))        # ids intact, no dupes
+    assert summary["slot_refills"] >= n_req - 2
+    assert 0 < summary["pages_peak_in_use"] <= pa.capacity
+    # every request recorded a real allocation and matched its reference
+    for r in sched.finished:
+        assert r.pages and all(1 <= p < 4 for p in r.pages)
+        assert r.tokens == _reference_decode(
+            cfg, params, r.prompt, r.max_new_tokens, cache_len=16), r.rid
+
+
+# ---------------------------------------------------------------------------
+# unit: allocator + gather
+# ---------------------------------------------------------------------------
+
+def test_page_allocator_pure():
+    pa = PageAllocator(6, page_size=4, max_request_pages=3,
+                       min_request_tokens=6)
+    assert pa.capacity == 5 and pa.free_pages == 5
+    assert pa.pages_needed(1) == 2          # floored at min_request_tokens
+    assert pa.pages_needed(9) == 3
+    assert pa.fits_ever(12) and not pa.fits_ever(13)   # 4 pages > cap 3
+    a = pa.alloc(3)
+    assert a == [1, 2, 3] and pa.in_use == 3 and pa.peak_in_use == 3
+    assert pa.alloc(3) is None              # free=2 < 3
+    b = pa.alloc(2)
+    assert b == [4, 5] and pa.free_pages == 0
+    pa.free(a)
+    assert pa.free_pages == 3 and pa.peak_in_use == 5
+    with pytest.raises(AssertionError):
+        pa.free([0])                        # the trash page is never freed
+    with pytest.raises(AssertionError):
+        pa.free([1])                        # double free
+
+
+def test_gather_pages_masks_unmapped_and_wiped():
+    """Unmapped block entries must gather as empty (positions -1) with
+    zeroed k/v — even when the trash page holds NaNs from a free slot's
+    garbage decode row (0·NaN would otherwise poison the softmax)."""
+    n_pages, psz, kvh, hd = 4, 2, 1, 2
+    k = jnp.arange(n_pages * psz * kvh * hd, dtype=jnp.float32).reshape(
+        n_pages, psz, kvh, hd)
+    k = k.at[0].set(jnp.nan)                # trash page poisoned
+    positions = jnp.array([[7, 8], [0, 1], [2, 3], [-1, -1]], jnp.int32)
+    block = jnp.array([[1, 2], [3, -1]], jnp.int32)
+    cache = PagedKVCache(k=k, v=k * 2, positions=positions,
+                         block_table=block)
+    kg, vg, pg = gather_pages(cache)
+    assert kg.shape == (2, 4, kvh, hd)
+    np.testing.assert_array_equal(np.asarray(pg),
+                                  [[0, 1, 2, 3], [-1, -1, -1, -1]])
+    # slot 1's unmapped tail gathers zeros, not the NaN trash page
+    assert np.isfinite(np.asarray(kg)).all()
+    assert (np.asarray(kg[1, 2:]) == 0).all()
+    np.testing.assert_array_equal(np.asarray(kg[0, 0]),
+                                  np.asarray(k[1, 0]))

@@ -3,7 +3,6 @@ reproduces uninterrupted training; the precision policy plumbs end-to-end."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import reduced_config
 from repro.core import PrecisionPolicy, use_policy

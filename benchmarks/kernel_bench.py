@@ -41,8 +41,8 @@ def _time(fn, *args, reps=3):
 def rows(smoke: bool = False):
     rng = np.random.default_rng(0)
     out = []
-    gemm_shapes = ((256, 256, 256),) if smoke \
-        else ((256, 256, 256), (512, 1024, 512))
+    gemm_shapes = (((256, 256, 256),) if smoke
+                   else ((256, 256, 256), (512, 1024, 512)))
     for m, k, n in gemm_shapes:
         a = jnp.asarray(quantize_np(rng.standard_normal((m, k)), BF16),
                         jnp.bfloat16)
@@ -70,6 +70,16 @@ def rows(smoke: bool = False):
                                               jnp.asarray(w))).view(np.uint32),
         ref.chained_fma_ref(a, w).view(np.uint32))
     out.append({"table": "kernel", "name": "fp_emu_skewed_64x96x32",
+                "us_per_call": round(us, 1), "bit_exact_vs_model": bit})
+    # approximate-normalization datapath (bulk tier): same kernel, coarse LZA
+    us = _time(lambda a, w: ops.skewed_datapath_matmul(a, w, mode="approx"),
+               jnp.asarray(a), jnp.asarray(w))
+    bit = np.array_equal(
+        np.asarray(ops.skewed_datapath_matmul(
+            jnp.asarray(a), jnp.asarray(w),
+            mode="approx")).view(np.uint32),
+        ref.chained_fma_ref(a, w, pipeline="approx").view(np.uint32))
+    out.append({"table": "kernel", "name": "fp_emu_approx_64x96x32",
                 "us_per_call": round(us, 1), "bit_exact_vs_model": bit})
     # quantize kernel
     x = jnp.asarray(rng.standard_normal((1024, 256)).astype(np.float32))
@@ -100,8 +110,8 @@ def autotune_rows(smoke: bool = False):
     """Sweep block shapes per GEMM shape; the winners land in the JSON cache
     (`autotune.cache_path()`), so later processes start tuned."""
     dtype = autotune.production_dtype()
-    shapes = ((256, 256, 256),) if smoke \
-        else ((256, 256, 256), (512, 1024, 512), (384, 256, 640))
+    shapes = (((256, 256, 256),) if smoke
+              else ((256, 256, 256), (512, 1024, 512), (384, 256, 640)))
     out = [_tuned_row("autotune", m, k, n, dtype) for m, k, n in shapes]
     out.append({"table": "autotune", "name": "cache",
                 "path": autotune.cache_path(),

@@ -80,8 +80,8 @@ def analytic_bytes_per_device(arch: str, shape_name: str, n_dev: int) -> float:
             S = min(cfg.window, T) if kind["attn"] == "local" else T
             cache += 2 * GB * S * cfg.num_kv_heads * cfg.hd * 2.0
     if cfg.attn_free or cfg.hybrid:
-        cache += GB * cfg.n_ssm_heads * cfg.ssm_head_dim * cfg.ssm_state \
-            * 4.0 * 2 * L
+        cache += (GB * cfg.n_ssm_heads * cfg.ssm_head_dim * cfg.ssm_state
+                  * 4.0 * 2 * L)
     act = ACT_PASSES["decode"] * L * (GB / n_dev) * d * 2.0
     return wts + cache / n_dev + act
 

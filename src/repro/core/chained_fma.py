@@ -23,6 +23,22 @@ The central claim of the paper is that the speculation is **exact** — no
 rollback, identical arithmetic results. ``tests/test_chained_fma.py`` proves
 ``skewed ≡ baseline`` bit-for-bit with hypothesis.
 
+* ``approx_*``    — the cheaper datapath variant of the *approximate
+  normalization* FMA (arxiv 2408.11997), modeled on top of the skewed
+  interface: the per-PE LZA/normalization shifter is **coarsened** to a
+  shift quantum of ``APPROX_COARSE`` bits (only the high bits of the LZA
+  count are examined, the fine shifter stages are removed). The forwarded
+  count ``L`` is rounded down to a multiple of the quantum, so up to
+  ``APPROX_COARSE − 1`` leading zeros stay unnormalized in the wide
+  accumulator ("normalization debt"). The value semantics stay exact —
+  exponent fix and net shift both consume the same coarsened ``L`` — but
+  alignment truncation cuts up to ``APPROX_COARSE − 1`` bits higher per
+  step, so results may differ from the exact pipelines **only below the
+  guard-bit threshold** (debt ≤ GUARD with the default quantum). The final
+  normalization at the column-end rounding stage stays exact, as in the
+  real design. This is the arithmetic behind the serve engine's "bulk"
+  quality tier (serve/scheduler.py).
+
 Number representation (unbiased exponents, value-anchored):
 
   normalized    value = (−1)^s · m · 2^(e − P),  msb(m) = P
@@ -49,6 +65,12 @@ ACC_MSB = 23 + GUARD          # P: msb position of a normalized significand
 _Q = ACC_MSB + 1              # anchor of unnormalized sums
 E_ZERO = -(1 << 20)           # exponent of an exact zero (never wins a max)
 _MAXSH = 62                   # clamp shifts (int64-safe; >= register width)
+
+# Approximate-normalization shift quantum (arxiv 2408.11997 model): the LZA
+# count is truncated to multiples of this, so normalization debt is bounded
+# by APPROX_COARSE − 1 = GUARD bits — per-step truncation error stays inside
+# the guard band of the wide accumulator. Power of two (kernel-foldable).
+APPROX_COARSE = GUARD + 1
 
 
 def _msb(x: np.ndarray) -> np.ndarray:
@@ -170,7 +192,8 @@ def baseline_pe(prod: Normalized, acc: Normalized) -> Normalized:
 # Skewed PE (Fig. 5/6): speculative exponent + fix, retimed normalization
 # ---------------------------------------------------------------------------
 
-def skewed_pe(prod: Normalized, acc: Unnormalized) -> Unnormalized:
+def skewed_pe(prod: Normalized, acc: Unnormalized, *,
+              coarse: int = 1) -> Unnormalized:
     """One PE of the proposed pipeline.
 
     Stage 1 computes speculative ``e' = max(e_M, ê_prev)`` and
@@ -178,6 +201,14 @@ def skewed_pe(prod: Normalized, acc: Unnormalized) -> Unnormalized:
     (its L is not yet available). Stage 2's fix unit receives ``L_prev``
     and corrects, per the paper's case analysis; the incoming sum's
     normalization is folded into the same net shift (Fig. 6).
+
+    ``coarse > 1`` selects the approximate-normalization variant: the LZA
+    count this PE forwards is rounded down to a multiple of ``coarse``
+    (coarse LZA, quantized shifter — arxiv 2408.11997), leaving up to
+    ``coarse − 1`` leading zeros unnormalized in the wide accumulator.
+    Because the next PE's exponent fix and net shift consume the same
+    coarsened ``L``, the represented value stays consistent; only the
+    alignment truncation cutoff rises by the debt.
     """
     ge = prod.e >= acc.ehat            # speculative compare (stage 1)
     d_spec = np.abs(prod.e - acc.ehat)  # d' (stage 1)
@@ -206,6 +237,8 @@ def skewed_pe(prod: Normalized, acc: Unnormalized) -> Unnormalized:
     s, S = _signed_add(prod.s, mp, acc.s, Sa)
     msb = _msb(S)
     L = _Q - msb
+    if coarse > 1:
+        L = (L // coarse) * coarse   # coarse LZA: keep only high count bits
     zero = S == 0
     return Unnormalized(
         s=np.where(zero, 0, s),
@@ -213,6 +246,13 @@ def skewed_pe(prod: Normalized, acc: Unnormalized) -> Unnormalized:
         S=np.where(zero, 0, S),
         L=np.where(zero, 0, L),
     )
+
+
+def approx_pe(prod: Normalized, acc: Unnormalized,
+              coarse: int = APPROX_COARSE) -> Unnormalized:
+    """Approximate-normalization PE (2408.11997): skewed interface with a
+    coarse LZA — see :func:`skewed_pe` (``coarse`` > 1)."""
+    return skewed_pe(prod, acc, coarse=coarse)
 
 
 def skewed_finalize(acc: Unnormalized) -> Normalized:
@@ -272,6 +312,21 @@ def skewed_chain(a: np.ndarray, w: np.ndarray, fmt=BF16) -> np.ndarray:
     return round_to_f32(skewed_finalize(acc))
 
 
+def approx_chain(a: np.ndarray, w: np.ndarray, fmt=BF16,
+                 coarse: int = APPROX_COARSE) -> np.ndarray:
+    """Approximate-normalization column (the "bulk" tier datapath): skewed
+    interface, coarse LZA; final normalization at the rounding stage stays
+    exact."""
+    acc = make_zero_unnorm(a.shape[1:])
+    for k in range(a.shape[0]):
+        acc = skewed_pe(multiply(a[k], w[k], fmt), acc, coarse=coarse)
+    return round_to_f32(skewed_finalize(acc))
+
+
+_CHAINS = {"baseline": baseline_chain, "skewed": skewed_chain,
+           "approx": approx_chain}
+
+
 def matmul_emulated(a: np.ndarray, w: np.ndarray, fmt=BF16,
                     pipeline: str = "skewed") -> np.ndarray:
     """(M,K) @ (K,N) through the bit-exact SA column model (slow; tests)."""
@@ -280,7 +335,8 @@ def matmul_emulated(a: np.ndarray, w: np.ndarray, fmt=BF16,
     M, K = a.shape
     K2, N = w.shape
     assert K == K2
+    if pipeline not in _CHAINS:
+        raise ValueError(f"unknown pipeline {pipeline!r}; have {sorted(_CHAINS)}")
     ab = np.broadcast_to(a.T[:, :, None], (K, M, N))       # a[k, m] per (m,n)
     wb = np.broadcast_to(w[:, None, :], (K, M, N))
-    chain = skewed_chain if pipeline == "skewed" else baseline_chain
-    return chain(ab, wb, fmt)
+    return _CHAINS[pipeline](ab, wb, fmt)

@@ -104,8 +104,8 @@ def decompose(x, fmt: FPFormat):
     """
     xnp = jnp if isinstance(x, jax.Array) else np
     f32 = xnp.asarray(x, dtype=xnp.float32)
-    bits = f32.view(xnp.uint32).astype(xnp.int64) if xnp is np else \
-        jax.lax.bitcast_convert_type(f32, jnp.uint32).astype(jnp.int64)
+    bits = (f32.view(xnp.uint32).astype(xnp.int64) if xnp is np else
+            jax.lax.bitcast_convert_type(f32, jnp.uint32).astype(jnp.int64))
     s = (bits >> 31) & 0x1
     e32 = (bits >> 23) & 0xFF
     m32 = bits & 0x7FFFFF

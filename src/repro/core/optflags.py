@@ -92,3 +92,18 @@ def gemm_backend() -> str:
         raise ValueError(
             f"REPRO_GEMM_BACKEND={backend!r}; want one of {_GEMM_BACKENDS}")
     return backend
+
+
+_SA_MODES = ("exact", "approx")
+
+
+def sa_mode() -> str:
+    """Process-default SA arithmetic mode for `PrecisionPolicy` (reads
+    REPRO_SA_MODE at call time, same contract as `gemm_backend`).
+    "exact" is the paper's round-once datapath; "approx" is the
+    approximate-normalization variant (coarse LZA, arxiv 2408.11997) that
+    backs the serve engine's "bulk" quality tier."""
+    mode = os.environ.get("REPRO_SA_MODE", "exact")
+    if mode not in _SA_MODES:
+        raise ValueError(f"REPRO_SA_MODE={mode!r}; want one of {_SA_MODES}")
+    return mode

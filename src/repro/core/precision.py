@@ -60,6 +60,7 @@ class PrecisionPolicy:
     accum_format: str = "fp32"       # "double-width reduction"
     output_format: str = "fp32"      # rounding target at the column end
     backend: str = "xla"             # xla | pallas | emulate
+    mode: str = "exact"              # exact | approx (bulk-tier coarse LZA)
 
     def __post_init__(self):
         get_format(self.input_format)
@@ -67,6 +68,8 @@ class PrecisionPolicy:
             raise ValueError("the SA reduces in FP32 (paper §II)")
         if self.backend not in ("xla", "pallas", "emulate"):
             raise ValueError(f"unknown backend {self.backend!r}")
+        if self.mode not in ("exact", "approx"):
+            raise ValueError(f"unknown SA mode {self.mode!r}")
 
     def cast_in(self, x: jax.Array) -> jax.Array:
         fmt = get_format(self.input_format)
@@ -87,28 +90,32 @@ class PrecisionPolicy:
         return quantize(y, fmt)
 
 
-# Default backend is A/B-able from one knob (core/optflags.py reads
-# REPRO_GEMM_BACKEND): xla ↔ pallas ↔ emulate without touching call sites.
+# Default backend/mode are A/B-able from one knob each (core/optflags.py
+# reads REPRO_GEMM_BACKEND and REPRO_SA_MODE) without touching call sites.
 from .optflags import gemm_backend as _default_backend  # noqa: E402
+from .optflags import sa_mode as _default_mode  # noqa: E402
 
-DEFAULT_POLICY = PrecisionPolicy(backend=_default_backend())
+DEFAULT_POLICY = PrecisionPolicy(backend=_default_backend(),
+                                 mode=_default_mode())
 _POLICY_STACK: list[PrecisionPolicy] = [DEFAULT_POLICY]
 
 
 def current_policy() -> PrecisionPolicy:
-    # the stack bottom tracks the REPRO_GEMM_BACKEND knob at call time, so
-    # env changes made after import are honored for calls that TRACE after
-    # the change (scoped use_policy overrides always win). An already-jitted
-    # callable keeps the backend it was traced with — A/B comparisons need a
-    # fresh jit wrapper per backend (see tests/test_precision_backends.py)
+    # the stack bottom tracks the REPRO_GEMM_BACKEND / REPRO_SA_MODE knobs at
+    # call time, so env changes made after import are honored for calls that
+    # TRACE after the change (scoped use_policy overrides always win). An
+    # already-jitted callable keeps the backend/mode it was traced with — A/B
+    # comparisons need a fresh jit wrapper per variant (see
+    # tests/test_precision_backends.py and serve/engine.py's per-mode chunks)
     global DEFAULT_POLICY
     if len(_POLICY_STACK) == 1:
-        backend = _default_backend()
-        if backend != _POLICY_STACK[0].backend:
+        backend, mode = _default_backend(), _default_mode()
+        if (backend != _POLICY_STACK[0].backend
+                or mode != _POLICY_STACK[0].mode):
             # keep the module-level DEFAULT_POLICY accessor in sync (note:
             # `from repro.core import DEFAULT_POLICY` captures a snapshot)
             DEFAULT_POLICY = _POLICY_STACK[0] = PrecisionPolicy(
-                backend=backend)
+                backend=backend, mode=mode)
     return _POLICY_STACK[-1]
 
 
@@ -129,9 +136,11 @@ class use_policy:
 def _emulated_dot(a: jax.Array, w: jax.Array, policy: PrecisionPolicy):
     from .chained_fma import matmul_emulated  # bit-exact numpy model
 
+    pipeline = "approx" if policy.mode == "approx" else "skewed"
+
     def cb(a_, w_):
         return matmul_emulated(np.asarray(a_), np.asarray(w_),
-                               get_format(policy.input_format), "skewed")
+                               get_format(policy.input_format), pipeline)
 
     out_shape = jax.ShapeDtypeStruct((a.shape[0], w.shape[1]), jnp.float32)
     return jax.pure_callback(cb, out_shape, a.astype(jnp.float32),
@@ -160,6 +169,12 @@ def sa_dot(a: jax.Array, w: jax.Array, policy: PrecisionPolicy | None = None,
     `bias`/`act` are the fused epilogue: applied to the fp32 chain *before*
     the single output rounding, on every backend (inside the kernel's final
     K step on pallas; in fp32 before `cast_out` on xla/emulate).
+
+    ``policy.mode == "approx"`` selects the bulk-tier arithmetic on every
+    backend: emulate runs the coarse-LZA `approx_chain`, pallas truncates
+    the accumulator's guard bits inside the kernel epilogue, and the xla
+    fallback applies the same `truncate_mantissa` to the fp32 chain before
+    the epilogue — so the tier semantics are backend-independent.
     """
     policy = policy or current_policy()
     a_q, w_q = policy.cast_in(a), policy.cast_in(w)
@@ -172,9 +187,14 @@ def sa_dot(a: jax.Array, w: jax.Array, policy: PrecisionPolicy | None = None,
         from repro.kernels.ops import sa_matmul  # lazy: avoid import cycle
 
         bias_f32 = None if bias is None else bias.astype(jnp.float32)
-        return policy.cast_out(sa_matmul(a_q, w_q, bias=bias_f32, act=act))
+        return policy.cast_out(sa_matmul(a_q, w_q, bias=bias_f32, act=act,
+                                         mode=policy.mode))
     # xla / fallback: MXU dot with fp32 accumulation, round once on output.
     y = jnp.matmul(a_q, w_q, preferred_element_type=jnp.float32)
+    if policy.mode == "approx":
+        from repro.kernels.sa_matmul import truncate_mantissa  # lazy: cycle
+
+        y = truncate_mantissa(y)
     return policy.cast_out(_epilogue(y, bias, act))
 
 
@@ -184,4 +204,8 @@ def sa_einsum(spec: str, a: jax.Array, w: jax.Array,
     policy = policy or current_policy()
     a_q, w_q = policy.cast_in(a), policy.cast_in(w)
     y = jnp.einsum(spec, a_q, w_q, preferred_element_type=jnp.float32)
+    if policy.mode == "approx":
+        from repro.kernels.sa_matmul import truncate_mantissa  # lazy: cycle
+
+        y = truncate_mantissa(y)
     return policy.cast_out(y)

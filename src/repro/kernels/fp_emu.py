@@ -23,11 +23,14 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-from repro.core.chained_fma import ACC_MSB, GUARD
+from repro.core.chained_fma import ACC_MSB, APPROX_COARSE, E_ZERO, GUARD
 from repro.core.fpformats import get_format
 
+# E_ZERO is imported from the numpy twin (a python int, so it folds into the
+# kernel rather than being captured): the two models must share one zero
+# sentinel or their bit-exactness contract drifts (tests/test_kernels.py
+# asserts they agree).
 _Q = ACC_MSB + 1
-E_ZERO = -100000  # python int: folded into the kernel, not captured
 
 
 def _msb(x):
@@ -66,7 +69,8 @@ def _fields(xf32, man_bits: int):
     return s, e, m
 
 
-def _fma_emu_kernel(a_ref, w_ref, o_ref, *, n_k: int, man_bits: int):
+def _fma_emu_kernel(a_ref, w_ref, o_ref, *, n_k: int, man_bits: int,
+                    approx: bool):
     a_blk = a_ref[...]        # (bm, K) f32 values on the reduced grid
     w_blk = w_ref[...]        # (K, bn)
     bm, bn = o_ref.shape
@@ -102,6 +106,12 @@ def _fma_emu_kernel(a_ref, w_ref, o_ref, *, n_k: int, man_bits: int):
         s_o = (v < 0).astype(jnp.int32)
         S_o = jnp.abs(v)
         L_o = _Q - _msb(jnp.maximum(S_o, 1))
+        if approx:
+            # approximate normalization (arxiv 2408.11997): coarse LZA —
+            # forward only the high bits of the count, leaving up to
+            # APPROX_COARSE−1 leading zeros unnormalized in the wide
+            # accumulator (same arithmetic as chained_fma.approx_pe)
+            L_o = L_o & ~(APPROX_COARSE - 1)
         z = S_o == 0
         return (jnp.where(z, 0, s_o),
                 jnp.where(z, E_ZERO, e_max + 1),
@@ -131,8 +141,8 @@ def _fma_emu_kernel(a_ref, w_ref, o_ref, *, n_k: int, man_bits: int):
     # saturate to Inf above it (documented output contract).
     e32 = e + 127
     frac = (keep & 0x7FFFFF).astype(jnp.uint32)
-    bits = (s.astype(jnp.uint32) << 31) \
-        | (jnp.clip(e32, 0, 255).astype(jnp.uint32) << 23) | frac
+    bits = ((s.astype(jnp.uint32) << 31)
+            | (jnp.clip(e32, 0, 255).astype(jnp.uint32) << 23) | frac)
     bits = jnp.where(e32 >= 255,
                      (s.astype(jnp.uint32) << 31) | jnp.uint32(0x7F800000),
                      bits)
@@ -142,20 +152,28 @@ def _fma_emu_kernel(a_ref, w_ref, o_ref, *, n_k: int, man_bits: int):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("fmt_name", "bm", "bn", "interpret"))
+                   static_argnames=("fmt_name", "bm", "bn", "interpret",
+                                    "mode"))
 def fma_emu_matmul(a: jax.Array, w: jax.Array, fmt_name: str = "bf16", *,
-                   bm: int = 64, bn: int = 64, interpret: bool = True):
+                   bm: int = 64, bn: int = 64, interpret: bool = True,
+                   mode: str = "exact"):
     """(M,K)@(K,N) through the bit-exact skewed datapath, tile-parallel.
 
     K is kept resident per block (this kernel demonstrates the PE chain; it
     is not the production GEMM path — that is `sa_matmul`).
+
+    ``mode="approx"`` runs the approximate-normalization variant (coarse
+    LZA forward; the on-device twin of `chained_fma.approx_chain`).
     """
+    if mode not in ("exact", "approx"):
+        raise ValueError(f"mode={mode!r}; want 'exact' or 'approx'")
     fmt = get_format(fmt_name)
     m, k = a.shape
     _, n = w.shape
     bm, bn = min(bm, m), min(bn, n)
     kernel = pl.pallas_call(
-        functools.partial(_fma_emu_kernel, n_k=k, man_bits=fmt.man_bits),
+        functools.partial(_fma_emu_kernel, n_k=k, man_bits=fmt.man_bits,
+                          approx=(mode == "approx")),
         grid=(pl.cdiv(m, bm), pl.cdiv(n, bn)),
         in_specs=[
             pl.BlockSpec((bm, k), lambda i, j: (i, 0)),

@@ -32,12 +32,16 @@ def sa_attention(q, k, v, **kw):
 def sa_matmul(a: jax.Array, w: jax.Array, *, bias: jax.Array | None = None,
               act: str = "none", scale=None, bm: int | None = None,
               bn: int | None = None, bk: int | None = None,
-              out_dtype=jnp.float32) -> jax.Array:
+              out_dtype=jnp.float32, mode: str = "exact") -> jax.Array:
     """Production GEMM under the SA contract (see sa_matmul.py).
 
     Unpinned block dims are resolved through the autotune cache (tuned entry
     if one exists for this (M, N, K, dtype, epilogue), MXU heuristic
     otherwise; set REPRO_AUTOTUNE=1 to sweep on miss).
+
+    ``mode="approx"`` selects the bulk-tier approximate-normalization
+    arithmetic (accumulator guard bits truncated before the single
+    rounding; see sa_matmul.APPROX_DROP_BITS).
     """
     m, k = a.shape
     n = w.shape[1]
@@ -46,7 +50,8 @@ def sa_matmul(a: jax.Array, w: jax.Array, *, bias: jax.Array | None = None,
                                         epilogue=act)
         bm, bn, bk = bm or tbm, bn or tbn, bk or tbk
     return sa_matmul_pallas(a, w, bias, scale, act=act, bm=bm, bn=bn, bk=bk,
-                            out_dtype=out_dtype, interpret=INTERPRET)
+                            out_dtype=out_dtype, interpret=INTERPRET,
+                            mode=mode)
 
 
 def sa_matmul_fp8(a: jax.Array, w: jax.Array, fmt_name: str = "fp8_e4m3",
@@ -61,9 +66,11 @@ def sa_matmul_fp8(a: jax.Array, w: jax.Array, fmt_name: str = "fp8_e4m3",
 
 
 def skewed_datapath_matmul(a: jax.Array, w: jax.Array,
-                           fmt_name: str = "bf16") -> jax.Array:
-    """Bit-exact skewed-pipeline GEMM (validation path; see fp_emu.py)."""
-    return fma_emu_matmul(a, w, fmt_name, interpret=True)
+                           fmt_name: str = "bf16",
+                           mode: str = "exact") -> jax.Array:
+    """Bit-exact skewed-pipeline GEMM (validation path; see fp_emu.py).
+    ``mode="approx"`` selects the approximate-normalization datapath."""
+    return fma_emu_matmul(a, w, fmt_name, interpret=True, mode=mode)
 
 
 __all__ = ["sa_matmul", "sa_matmul_fp8", "skewed_datapath_matmul",

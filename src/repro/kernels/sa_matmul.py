@@ -39,6 +39,25 @@ from jax.experimental.pallas import tpu as pltpu
 from .pltpu_compat import CompilerParams as _CompilerParams
 
 EPILOGUES = ("none", "relu", "gelu", "silu")
+MODES = ("exact", "approx")
+
+# The MXU-path model of the approximate-normalization datapath ("bulk"
+# serving tier): chained_fma.approx_chain bounds the coarse-LZA truncation
+# debt to GUARD bits of the wide accumulator, so on the production fp32
+# chain the same information loss is the low GUARD mantissa bits of the
+# accumulator — dropped (round-to-zero) before the single output rounding.
+APPROX_DROP_BITS = 3
+
+
+def truncate_mantissa(y: jax.Array, bits: int = APPROX_DROP_BITS) -> jax.Array:
+    """Zero the low `bits` mantissa bits of an fp32 array (RTZ truncation).
+
+    Shared by every backend's mode="approx" path (pallas epilogue, xla
+    fallback in core/precision.py) so the tier arithmetic is
+    backend-independent."""
+    b = jax.lax.bitcast_convert_type(y.astype(jnp.float32), jnp.uint32)
+    b = b & ~jnp.uint32((1 << bits) - 1)
+    return jax.lax.bitcast_convert_type(b, jnp.float32)
 
 
 def apply_act(y: jax.Array, act: str) -> jax.Array:
@@ -80,7 +99,7 @@ def default_blocks(m: int, n: int, k: int) -> tuple[int, int, int]:
 
 
 def _matmul_kernel(a_ref, w_ref, scale_ref, *refs, n_k: int, out_dtype,
-                   act: str, has_bias: bool, save_raw: bool):
+                   act: str, has_bias: bool, save_raw: bool, approx: bool):
     """One (i, j, k) grid step: psum_k = psum_{k-1} + A_ik · W_kj."""
     if has_bias:
         bias_ref, refs = refs[0], refs[1:]
@@ -103,6 +122,11 @@ def _matmul_kernel(a_ref, w_ref, scale_ref, *refs, n_k: int, out_dtype,
         # epilogue on the unnormalized fp32 chain, then the single rounding
         # at the end of the K chain (column south end)
         raw = acc_ref[...]
+        if approx:
+            # bulk-tier arithmetic: drop the accumulator's guard-band low
+            # bits (the information a coarse-LZA datapath loses) before the
+            # epilogue and the single rounding
+            raw = truncate_mantissa(raw)
         if save_raw:
             raw_ref[...] = raw
         y = raw * scale_ref[0, 0]
@@ -113,7 +137,7 @@ def _matmul_kernel(a_ref, w_ref, scale_ref, *refs, n_k: int, out_dtype,
 
 
 def _pallas_fused(a, w, bias, scale, *, act, bm, bn, bk, out_dtype,
-                  save_raw, interpret):
+                  save_raw, interpret, mode="exact"):
     """pallas_call plumbing: padding, specs, optional raw-accumulator output."""
     m, k = a.shape
     k2, n = w.shape
@@ -152,7 +176,7 @@ def _pallas_fused(a, w, bias, scale, *, act, bm, bn, bk, out_dtype,
     kernel = pl.pallas_call(
         functools.partial(_matmul_kernel, n_k=grid[2], out_dtype=out_dtype,
                           act=act, has_bias=bias is not None,
-                          save_raw=save_raw),
+                          save_raw=save_raw, approx=(mode == "approx")),
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
@@ -178,6 +202,7 @@ class _GemmCfg:
     out_dtype: object
     interpret: bool
     has_scale: bool = False   # caller passed a real scale (vs synthesized 1)
+    mode: str = "exact"       # "approx" = bulk-tier truncated accumulator
 
     @property
     def needs_raw(self) -> bool:
@@ -201,7 +226,7 @@ def _bwd_blocks(m: int, n: int, k: int) -> tuple[int, int, int]:
 def _sa_matmul_vjp(cfg: _GemmCfg, a, w, bias, scale):
     return _pallas_fused(a, w, bias, scale, act=cfg.act, bm=cfg.bm, bn=cfg.bn,
                          bk=cfg.bk, out_dtype=cfg.out_dtype, save_raw=False,
-                         interpret=cfg.interpret)
+                         interpret=cfg.interpret, mode=cfg.mode)
 
 
 def _sa_matmul_fwd(cfg: _GemmCfg, a, w, bias, scale):
@@ -210,7 +235,8 @@ def _sa_matmul_fwd(cfg: _GemmCfg, a, w, bias, scale):
     # can form the activation jacobian / dscale without a recompute GEMM
     out = _pallas_fused(a, w, bias, scale, act=cfg.act, bm=cfg.bm,
                         bn=cfg.bn, bk=cfg.bk, out_dtype=cfg.out_dtype,
-                        save_raw=cfg.needs_raw, interpret=cfg.interpret)
+                        save_raw=cfg.needs_raw, interpret=cfg.interpret,
+                        mode=cfg.mode)
     y, raw = out if cfg.needs_raw else (out, None)
     return y, (a, w, bias, scale, raw)
 
@@ -258,24 +284,32 @@ _sa_matmul_vjp.defvjp(_sa_matmul_fwd, _sa_matmul_bwd)
 
 @functools.partial(
     jax.jit,
-    static_argnames=("act", "bm", "bn", "bk", "out_dtype", "interpret"))
+    static_argnames=("act", "bm", "bn", "bk", "out_dtype", "interpret",
+                     "mode"))
 def sa_matmul_pallas(a: jax.Array, w: jax.Array, bias: jax.Array | None = None,
                      scale: jax.Array | float | None = None, *,
                      act: str = "none", bm: int = 256, bn: int = 256,
                      bk: int = 512, out_dtype=jnp.float32,
-                     interpret: bool = False):
+                     interpret: bool = False, mode: str = "exact"):
     """(M, K) @ (K, N) with SA-contract arithmetic. Inputs bf16 (or fp8
     values carried in bf16/f32 containers); fused epilogue
     ``act(acc·scale + bias)`` applied before the single rounding to
     `out_dtype`. Differentiable (custom VJP; backward GEMMs use the same
-    kernel)."""
+    kernel).
+
+    ``mode="approx"`` is the bulk serving tier: the accumulator's low
+    APPROX_DROP_BITS mantissa bits are truncated before the epilogue and
+    the single rounding (forward only — backward GEMMs stay exact)."""
     if act not in EPILOGUES:
         raise ValueError(f"unknown epilogue act {act!r}; have {EPILOGUES}")
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}; have {MODES}")
     if bias is not None and bias.ndim != 1:
         # the kernel's (1, bn) block broadcasts a single bias row per output
         # column tile — anything but a (N,) vector would be silently wrong
         raise ValueError(f"bias must be a (N,) vector, got {bias.shape}")
     scale_arr = jnp.asarray(1.0 if scale is None else scale, jnp.float32)
     cfg = _GemmCfg(act=act, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
-                   interpret=interpret, has_scale=scale is not None)
+                   interpret=interpret, has_scale=scale is not None,
+                   mode=mode)
     return _sa_matmul_vjp(cfg, a, w, bias, scale_arr)

@@ -88,8 +88,9 @@ def memory_dict(compiled) -> dict:
             "generated_code_size_in_bytes")
     d = {k: int(getattr(ma, k)) for k in keys if hasattr(ma, k)}
     if "argument_size_in_bytes" in d and "temp_size_in_bytes" in d:
-        d["peak_estimate_bytes"] = d["argument_size_in_bytes"] \
-            + d["output_size_in_bytes"] + d["temp_size_in_bytes"]
+        d["peak_estimate_bytes"] = (d["argument_size_in_bytes"]
+                                    + d["output_size_in_bytes"]
+                                    + d["temp_size_in_bytes"])
     return d
 
 
@@ -203,9 +204,9 @@ def main():
                 extra = ""
                 if status == "ok":
                     mem = rec["memory"].get("peak_estimate_bytes", 0) / 2**30
-                    extra = f"compile={rec['compile_s']:.1f}s " \
-                            f"peak/dev={mem:.2f}GiB " \
-                            f"coll={rec['collectives']['total']/2**20:.1f}MiB"
+                    extra = (f"compile={rec['compile_s']:.1f}s "
+                             f"peak/dev={mem:.2f}GiB "
+                             f"coll={rec['collectives']['total']/2**20:.1f}MiB")
                 elif status == "error":
                     n_bad += 1
                     extra = rec["error"][:120]

@@ -11,6 +11,15 @@ Frontend archs (vlm / enc-dec) fall back to static-batch `generate` — the
 continuous engine is text-only for now — with the same honest accounting:
 tok/s counts real generated tokens (nothing past EOS), and prefill vs
 decode wall time are reported separately.
+
+`--tier-mix p` marks each request "bulk" with probability p (seeded):
+bulk requests may decode on the approximate-normalization datapath (the
+coarse-LZA design of arxiv 2408.11997 — see core/chained_fma.approx_*)
+whenever a whole chunk is bulk; premium requests always get the exact
+round-once datapath. With a mix, the driver also runs the engine's
+divergence probe (teacher-forced exact-vs-approx logits on one prompt;
+max-ulp is bounded by the dropped guard bits — see DESIGN.md §6) and the
+per-tier modeled energy summary (core/energy.py tier_energy_summary).
 """
 from __future__ import annotations
 
@@ -27,7 +36,8 @@ from repro.serve.scheduler import SlotScheduler
 
 
 def build_requests(sched: SlotScheduler, cfg, n: int, rate: float,
-                   prompt_lens: list[int], max_new: int, seed: int):
+                   prompt_lens: list[int], max_new: int, seed: int,
+                   tier_mix: float = 0.0):
     rng = np.random.default_rng(seed)
     t = 0.0
     for i in range(n):
@@ -35,7 +45,9 @@ def build_requests(sched: SlotScheduler, cfg, n: int, rate: float,
             t += float(rng.exponential(1.0 / rate))
         plen = prompt_lens[i % len(prompt_lens)]
         prompt = rng.integers(0, cfg.vocab_size, plen)
-        sched.submit(prompt, max_new_tokens=max_new, arrival_time=t)
+        tier = "bulk" if rng.random() < tier_mix else "premium"
+        sched.submit(prompt, max_new_tokens=max_new, arrival_time=t,
+                     tier=tier)
 
 
 def preseed_decode_blocks(cfg, batch: int):
@@ -72,15 +84,30 @@ def serve_continuous(args, cfg, params, plens) -> dict:
                          max_seq_len=args.max_seq_len)
     sched = SlotScheduler(args.batch, eos_id=args.eos_id)
     build_requests(sched, cfg, args.requests, args.rate, plens,
-                   args.max_new, args.seed)
+                   args.max_new, args.seed, tier_mix=args.tier_mix)
     summary = engine.serve(sched, greedy=True)
     for r in sorted(sched.finished, key=lambda r: r.rid):
         # rejected requests never started: no TTFT / rate to report
         ttft = float("nan") if r.ttft is None else r.ttft
-        print(f"req {r.rid:3d} slot {r.slot} prompt {r.prompt_len:4d} "
+        print(f"req {r.rid:3d} slot {r.slot} {r.tier:7s} "
+              f"prompt {r.prompt_len:4d} "
               f"gen {r.n_generated:4d} ({r.finish_reason or 'n/a':8s}) "
               f"ttft {ttft:.3f}s "
               f"decode {r.decode_tok_s or float('nan'):.1f} tok/s")
+    if args.tier_mix > 0:
+        from repro.core.energy import tier_energy_summary
+
+        energy = tier_energy_summary(sched.tier_mode_tokens,
+                                     engine.macs_per_token())
+        summary |= {f"energy_{k}": v for k, v in energy.items()}
+        rng = np.random.default_rng(args.seed + 7)
+        probe = engine.divergence_probe(
+            rng.integers(0, cfg.vocab_size, plens[0]),
+            steps=min(16, args.max_new))
+        print(f"[divergence] steps={probe['steps']} "
+              f"max_ulp={probe['max_ulp']} kl_mean={probe['kl_mean']:.3e} "
+              f"max_abs_diff={probe['max_abs_diff']:.3e}")
+        summary |= {f"divergence_{k}": v for k, v in probe.items()}
     return summary
 
 
@@ -152,6 +179,10 @@ def main(argv=None):
                          "long request without growing every slot")
     ap.add_argument("--sync-every", type=int, default=8,
                     help="decode steps per host sync / scheduler tick")
+    ap.add_argument("--tier-mix", type=float, default=0.0,
+                    help="fraction of requests submitted as the 'bulk' "
+                         "quality tier (approximate-normalization decode "
+                         "when a whole chunk is bulk); 0 = all premium")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="EOS token id (-1: never fires on synthetic vocab)")
     ap.add_argument("--autotune-decode", action="store_true",

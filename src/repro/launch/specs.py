@@ -126,8 +126,8 @@ def input_specs(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh,
         pos = jax.ShapeDtypeStruct((GB,), jnp.int32)
         pos_shard = NamedSharding(mesh, S.data_specs(mesh, pos.shape))
         args = (params, token, cache, pos) + ((fe,) if fe is not None else ())
-        in_sh = (pshard, tshard, cshard, pos_shard) + \
-            ((fe_shard,) if fe is not None else ())
+        in_sh = ((pshard, tshard, cshard, pos_shard)
+                 + ((fe_shard,) if fe is not None else ()))
         logits_shard = NamedSharding(mesh, S.data_specs(mesh, (GB, 1, 1)))
         return step_fn, args, in_sh, (logits_shard, cshard)
 
@@ -137,6 +137,6 @@ def input_specs(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh,
 def cell_is_applicable(cfg: ArchConfig, shape: ShapeCfg) -> tuple[bool, str]:
     """DESIGN.md §5: long_500k is skipped for pure full-attention archs."""
     if shape.name == "long_500k" and not cfg.sub_quadratic:
-        return False, "pure full-attention arch: 500k decode cell skipped " \
-                      "(DESIGN.md §5)"
+        return False, ("pure full-attention arch: 500k decode cell skipped "
+                       "(DESIGN.md §5)")
     return True, ""

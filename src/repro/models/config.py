@@ -106,8 +106,8 @@ class ArchConfig:
         """Eligible for the long_500k cell (DESIGN.md §5)."""
         if self.family in ("ssm", "hybrid"):
             return True
-        return all(p == "local" for p in self.attn_pattern) or \
-            ("local" in self.attn_pattern)
+        return (all(p == "local" for p in self.attn_pattern)
+                or "local" in self.attn_pattern)
 
     def layer_kind(self, i: int) -> dict:
         """Structural descriptor of layer i (drives block assembly)."""
@@ -136,8 +136,8 @@ class ArchConfig:
         """Approximate parameter count (reported in DESIGN/EXPERIMENTS)."""
         d, hd = self.d_model, self.hd
         per_layer = 0
-        attn = d * self.num_heads * hd + 2 * d * self.num_kv_heads * hd \
-            + self.num_heads * hd * d
+        attn = (d * self.num_heads * hd + 2 * d * self.num_kv_heads * hd
+                + self.num_heads * hd * d)
         ffn_mats = 2 if self.family == "audio" else 3   # MLP vs SwiGLU
         ffn_dense = ffn_mats * d * (self.d_ff_dense or self.d_ff)
         for i in range(self.num_layers):

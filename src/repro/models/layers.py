@@ -31,8 +31,8 @@ def layernorm(x, w, b, eps=1e-5):
     x32 = x.astype(jnp.float32)
     mu = jnp.mean(x32, axis=-1, keepdims=True)
     var = jnp.var(x32, axis=-1, keepdims=True)
-    y = (x32 - mu) * lax.rsqrt(var + eps) * w.astype(jnp.float32) \
-        + b.astype(jnp.float32)
+    y = ((x32 - mu) * lax.rsqrt(var + eps) * w.astype(jnp.float32)
+         + b.astype(jnp.float32))
     return y.astype(x.dtype)
 
 
@@ -441,8 +441,8 @@ def attention_block(x, p, cfg, meta, positions, cache: KVCache | None = None,
         k = S_.constrain(k, "batch", None, "model", None)
         v = S_.constrain(v, "batch", None, "model", None)
     new_cache = None
-    if cache is not None and x.shape[1] == 1 \
-            and isinstance(cache, PagedKVCache):
+    if (cache is not None and x.shape[1] == 1
+            and isinstance(cache, PagedKVCache)):
         # paged write: position p of slot b lives at offset p % page_size of
         # page block_table[b, p // page_size]. Rows whose position falls
         # outside their mapped pages (free slots, post-retirement steps
@@ -513,8 +513,8 @@ def attention_block(x, p, cfg, meta, positions, cache: KVCache | None = None,
                 slots = pos_keep % S
                 k_c = jnp.zeros_like(cache.k).at[bidx, slots].set(k_keep)
                 v_c = jnp.zeros_like(cache.v).at[bidx, slots].set(v_keep)
-                pos_c = jnp.full_like(cache.positions, -1) \
-                    .at[bidx, slots].set(pos_keep)
+                pos_c = (jnp.full_like(cache.positions, -1)
+                         .at[bidx, slots].set(pos_keep))
             else:
                 k_c = lax.dynamic_update_slice_in_dim(cache.k, k, 0, axis=1)
                 v_c = lax.dynamic_update_slice_in_dim(cache.v, v, 0, axis=1)

@@ -303,10 +303,10 @@ def _sublayer(x, p, cfg, meta, positions, cache, pos, encoder_out):
 
 def _encoder_kv(p, cfg, encoder_out):
     B, S, _ = encoder_out.shape
-    k = sa_dot(encoder_out.reshape(B * S, -1), p["wk"]) \
-        .reshape(B, S, cfg.num_kv_heads, cfg.hd)
-    v = sa_dot(encoder_out.reshape(B * S, -1), p["wv"]) \
-        .reshape(B, S, cfg.num_kv_heads, cfg.hd)
+    k = sa_dot(encoder_out.reshape(B * S, -1),
+               p["wk"]).reshape(B, S, cfg.num_kv_heads, cfg.hd)
+    v = sa_dot(encoder_out.reshape(B * S, -1),
+               p["wv"]).reshape(B, S, cfg.num_kv_heads, cfg.hd)
     return k, v
 
 
@@ -411,8 +411,8 @@ def forward(params, cfg: ArchConfig, tokens, *, positions=None, cache=None,
     head = params.get("lm_head", None)
     if head is None:
         head = params["embed"].T
-    logits = sa_dot(x.reshape(-1, cfg.d_model), head) \
-        .reshape(x.shape[0], x.shape[1], cfg.padded_vocab)
+    logits = sa_dot(x.reshape(-1, cfg.d_model),
+                    head).reshape(x.shape[0], x.shape[1], cfg.padded_vocab)
     logits = L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
     if cfg.padded_vocab != cfg.vocab_size:   # mask padding logits (no reshard)
         valid = jnp.arange(cfg.padded_vocab) < cfg.vocab_size

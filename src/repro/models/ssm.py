@@ -84,8 +84,8 @@ def ssd_chunked(x, dt, A, B_, C_, chunk: int, initial_state=None):
         S_new = S_prev * jnp.exp(dA_tot_c)[:, :, None, None] + S_c
         return S_new, y_c
 
-    S0 = initial_state if initial_state is not None else \
-        jnp.zeros((Bsz, H, P, N), jnp.float32)
+    S0 = (initial_state if initial_state is not None
+          else jnp.zeros((Bsz, H, P, N), jnp.float32))
     S_final, y_inter = lax.scan(
         chunk_step, S0.astype(jnp.float32),
         (S_chunk.swapaxes(0, 1).astype(jnp.float32),

@@ -32,6 +32,7 @@ Architecture (DESIGN.md §Serving):
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import time
 from typing import Any
@@ -41,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core.precision import current_policy, use_policy
 from repro.models.config import ArchConfig
 from repro.models import model as M
 from repro.models.layers import KVCache, PagedKVCache
@@ -98,7 +100,7 @@ class ServeEngine:
                             and cfg.window < self.max_seq_len else 1)
         self._prefill = jax.jit(make_prefill_step(cfg))
         self._serve_step = make_serve_step(cfg)
-        self._chunks: dict[tuple[int, bool], Any] = {}
+        self._chunks: dict[tuple[int, bool, str], Any] = {}
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
         self._clear_slot = jax.jit(self._clear_slot_impl, donate_argnums=(0,))
         self.last_stats: dict[str, float] = {}
@@ -204,12 +206,18 @@ class ServeEngine:
         return (self.cfg.family != "ssm"
                 and req.prompt_len + req.max_new_tokens > self.cache_len)
 
-    def _chunk_fn(self, steps: int, greedy: bool):
+    def _chunk_fn(self, steps: int, greedy: bool, mode: str = "exact"):
         """steps decode iterations in one device-side lax.scan.
 
         Returns (tok, cache, pos, rng, toks (steps, B)); the caller fetches
-        `toks` once per chunk — the only host sync on the decode path."""
-        key = (steps, greedy)
+        `toks` once per chunk — the only host sync on the decode path.
+
+        `mode` selects the SA datapath for the chunk ("exact" | "approx" —
+        the bulk serving tier). The precision policy is consulted at TRACE
+        time, so mode is part of the jit-cache key and each variant is
+        traced under its own `use_policy` scope — a shared traced callable
+        would silently keep the mode it first saw."""
+        key = (steps, greedy, mode)
         if key not in self._chunks:
             serve_step = self._serve_step
 
@@ -230,8 +238,104 @@ class ServeEngine:
                     body, (tok, cache, pos, rng), length=steps)
                 return tok, cache, pos, rng, toks
 
-            self._chunks[key] = jax.jit(chunk, donate_argnums=(2,))
+            jitted = jax.jit(chunk, donate_argnums=(2,))
+
+            def run(*args, _jitted=jitted, _mode=mode):
+                pol = dataclasses.replace(current_policy(), mode=_mode)
+                with use_policy(pol):
+                    return _jitted(*args)
+
+            self._chunks[key] = run
         return self._chunks[key]
+
+    # ------------------------------------------------------------------
+    # quality-tier instrumentation
+    # ------------------------------------------------------------------
+
+    def macs_per_token(self) -> int:
+        """Model MACs per generated token ≈ total parameter count (every
+        dense weight element contributes one MAC per token at decode;
+        attention-score MACs are a small correction at decode depths).
+        Feeds the per-tier energy model (core/energy.py)."""
+        return int(sum(int(np.prod(x.shape))
+                       for x in jax.tree.leaves(self.params)))
+
+    def divergence_probe(self, prompt, steps: int = 16) -> dict:
+        """Measure the bulk tier's output divergence against the exact
+        datapath on this engine's weights.
+
+        Teacher-forced A/B: prefill once on the exact path (prefill is
+        always exact in `serve()` too), then feed the exact path's greedy
+        tokens to BOTH datapaths from the same cache state and compare the
+        per-step next-token logits. Each mode jits a *fresh closure* over
+        the step — the precision policy is trace-time state and jit's
+        trace cache keys on the wrapped function object, so re-jitting
+        `self._serve_step` itself would reuse the first mode's trace.
+
+        Returns {"steps", "max_ulp", "kl_mean", "max_abs_diff"}: max-ulp is
+        the largest per-logit distance in units-in-the-last-place (ordered
+        int32 mapping), kl_mean the mean per-step KL(exact ‖ approx) of the
+        next-token distributions.
+        """
+        prompt = list(map(int, prompt))
+        T = len(prompt)
+        if T + steps > self.cache_len:
+            raise ValueError(f"probe needs {T + steps} cache slots; "
+                             f"engine has {self.cache_len}")
+        exact_pol = dataclasses.replace(current_policy(), mode="exact")
+        cache0 = self.new_cache(batch=1)
+        with use_policy(exact_pol):
+            prefill = jax.jit(make_prefill_step(self.cfg))
+            logits, cache0 = prefill(
+                self.params, jnp.asarray(prompt, jnp.int32)[None], cache0,
+                None)
+        first = int(np.asarray(jnp.argmax(logits[0, -1])))
+
+        def fresh_step():
+            # a new function object per call: jit must not share traces
+            # across modes (see docstring)
+            def step(params, tok, cache, pos, frontend,
+                     _inner=self._serve_step):
+                return _inner(params, tok, cache, pos, frontend)
+            return jax.jit(step)
+
+        def run_mode(mode, tokens):
+            """Decode `steps` tokens under `mode`. `tokens[s]` (if set)
+            teacher-forces step s's input; else greedy from step s-1."""
+            pol = dataclasses.replace(current_policy(), mode=mode)
+            step = fresh_step()
+            out = []
+            cache, tok = cache0, first
+            with use_policy(pol):
+                for s in range(steps):
+                    if tokens is not None:
+                        tok = tokens[s]
+                    logits, cache = step(
+                        self.params, jnp.asarray([[tok]], jnp.int32), cache,
+                        jnp.asarray([T + s], jnp.int32), None)
+                    row = np.asarray(logits[0, -1], np.float32)
+                    out.append(row)
+                    tok = int(row.argmax())
+            return np.stack(out)
+
+        le = run_mode("exact", None)
+        # teacher-forced approx pass: replay the exact tokens so both modes
+        # see identical inputs at every step (divergence is per-step, not
+        # compounded through token choices)
+        teacher = [first] + [int(r.argmax()) for r in le[:-1]]
+        la = run_mode("approx", teacher)
+
+        def ordered(x):
+            b = x.view(np.int32).astype(np.int64)
+            return np.where(b < 0, -(b & 0x7FFFFFFF), b)
+
+        max_ulp = int(np.max(np.abs(ordered(le) - ordered(la))))
+        pe = jax.nn.log_softmax(jnp.asarray(le), axis=-1)
+        pa = jax.nn.log_softmax(jnp.asarray(la), axis=-1)
+        kl = jnp.sum(jnp.exp(pe) * (pe - pa), axis=-1)
+        return {"steps": int(steps), "max_ulp": max_ulp,
+                "kl_mean": float(jnp.mean(kl)),
+                "max_abs_diff": float(np.max(np.abs(le - la)))}
 
     # ------------------------------------------------------------------
     # static-batch generation (convenience / frontend archs)
@@ -284,8 +388,8 @@ class ServeEngine:
         the engine's prefill/decode wall-time split. Text-only for now:
         per-slot frontends would need fragment caches of their own.
         """
-        assert scheduler.n_slots == self.batch, \
-            (scheduler.n_slots, self.batch)
+        assert scheduler.n_slots == self.batch, (
+            scheduler.n_slots, self.batch)
         if self.cfg.family == "vlm" or self.cfg.is_encdec:
             # prefill/decode below run frontend=None: a vlm/enc-dec arch
             # would silently skip its encoder and generate garbage
@@ -306,6 +410,7 @@ class ServeEngine:
         tok = jnp.zeros((B,), jnp.int32)
         pos = jnp.zeros((B,), jnp.int32)
         prefill_s = decode_s = 0.0
+        chunk_modes = {"exact": 0, "approx": 0}
 
         def clear_freed():
             # retirement freed the slot's pages; unmap its block-table rows
@@ -378,15 +483,27 @@ class ServeEngine:
                         skew += wait
                 continue
 
+            # chunk datapath: approximate only when EVERY active slot is a
+            # bulk request — premium never decodes on the approx path; bulk
+            # slots sharing a chunk with premium get exact arithmetic (the
+            # tier is a quality floor). Tier-affine admission (scheduler)
+            # phase-separates mixed streams so all-bulk chunks do occur.
+            active_tiers = {s.req.tier for s in scheduler.slots
+                            if s.req is not None}
+            mode = "approx" if active_tiers == {"bulk"} else "exact"
+            chunk_modes[mode] += 1
             t_d = now()
             tok, cache, pos, rng, toks = self._chunk_fn(
-                self.sync_every, greedy)(self.params, tok, cache, pos,
-                                         None, rng)
+                self.sync_every, greedy, mode)(self.params, tok, cache, pos,
+                                               None, rng)
             toks_np = np.asarray(toks)       # the chunk's single host sync
             decode_s += now() - t_d
-            scheduler.observe(toks_np, now())
+            scheduler.observe(toks_np, now(), mode=mode)
 
         summary = scheduler.summary()
+        if chunk_modes["approx"]:
+            summary |= {"chunks_exact": chunk_modes["exact"],
+                        "chunks_approx": chunk_modes["approx"]}
         summary |= {"prefill_s": round(prefill_s, 4),
                     "decode_s": round(decode_s, 4),
                     "wall_s": round(now(), 4)}

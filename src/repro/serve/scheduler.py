@@ -27,6 +27,19 @@ Semantics
   per-request block table holds) is admitted with `pages=None` so the
   engine retires it as rejected. Pages free on retirement — EOS, budget,
   or rejection — so the pool can never leak across slot refills.
+* Each request carries a **quality tier**: "premium" decodes on the exact
+  round-once datapath, "bulk" may decode on the approximate-normalization
+  datapath (core/chained_fma.approx_*). A decode chunk is shared by the
+  whole batch, so the engine runs a chunk approximate only when *every*
+  active slot is bulk — admission is therefore **tier-affine**: among
+  arrived requests, one matching the active batch's (homogeneous) tier is
+  preferred over the FIFO head, so tiers phase-separate and bulk chunks
+  actually happen under mixed traffic. Premium requests never decode on
+  the approximate path; bulk requests sharing a chunk with premium ones
+  simply get exact arithmetic (quality floor, never a ceiling).
+  `observe(..., mode=)` records which datapath produced each token, so
+  the summary can report per-(tier, mode) token counts for the energy
+  model (core/energy.py tier_energy_summary).
 """
 from __future__ import annotations
 
@@ -34,6 +47,8 @@ import dataclasses
 from collections import deque
 
 import numpy as np
+
+TIERS = ("premium", "bulk")
 
 
 class PageAllocator:
@@ -105,6 +120,7 @@ class Request:
     prompt: list[int]
     max_new_tokens: int
     arrival_time: float = 0.0
+    tier: str = "premium"                # "premium" (exact) | "bulk" (approx)
 
     # filled in by the scheduler as the request is served
     tokens: list[int] = dataclasses.field(default_factory=list)
@@ -167,16 +183,24 @@ class SlotScheduler:
         self._slot_used = [False] * n_slots
         self._freed_slots: list[int] = []
         self._next_rid = 0
+        # real generated tokens by (tier, datapath mode) — the energy
+        # model's input. Prefill/first tokens are always exact; bulk
+        # tokens decoded in a mixed (exact) chunk are counted honestly
+        # as ("bulk", "exact").
+        self.tier_mode_tokens: dict[tuple[str, str], int] = {}
+        self.tier_affine_picks = 0   # admissions that skipped the FIFO head
 
     # ------------------------------------------------------------------
     # submission / admission
     # ------------------------------------------------------------------
 
     def submit(self, prompt, max_new_tokens: int,
-               arrival_time: float = 0.0) -> Request:
+               arrival_time: float = 0.0, tier: str = "premium") -> Request:
+        if tier not in TIERS:
+            raise ValueError(f"unknown tier {tier!r}; have {TIERS}")
         req = Request(rid=self._next_rid, prompt=list(map(int, prompt)),
                       max_new_tokens=int(max_new_tokens),
-                      arrival_time=float(arrival_time))
+                      arrival_time=float(arrival_time), tier=tier)
         self._next_rid += 1
         # keep the queue sorted by arrival (stable: ties stay in submit
         # order), so admission is FIFO among *arrived* requests — a late
@@ -194,29 +218,56 @@ class SlotScheduler:
     def next_arrival(self) -> float | None:
         return self.pending[0].arrival_time if self.pending else None
 
+    def _active_tier(self) -> str | None:
+        """The batch's tier iff every active slot shares one, else None."""
+        tiers = {s.req.tier for s in self.slots if s.req is not None}
+        return tiers.pop() if len(tiers) == 1 else None
+
+    def _select_pending(self, now: float) -> int | None:
+        """Index of the pending request to admit next: the earliest-arrived
+        one matching the active batch's homogeneous tier (tier-affine — so
+        mixed streams phase-separate and all-bulk chunks can run the
+        approximate datapath), else the FIFO head. Returns None when
+        nothing has arrived by `now`."""
+        if not self.pending or self.pending[0].arrival_time > now:
+            return None
+        tier = self._active_tier()
+        if tier is not None and self.pending[0].tier != tier:
+            for i, req in enumerate(self.pending):
+                if req.arrival_time > now:
+                    break
+                if req.tier == tier:
+                    return i
+        return 0
+
     def admit(self, slot_idx: int, now: float) -> Request | None:
-        """Pop the queue head into `slot_idx` if it has arrived by `now`.
+        """Admit the next pending request (see `_select_pending`) into
+        `slot_idx` if one has arrived by `now`.
 
         With a page allocator attached, admission is additionally gated on
-        free pages: a head request that could fit an empty pool but not the
+        free pages: a candidate that could fit an empty pool but not the
         current one stays queued (returns None — the slot idles until a
         retirement frees pages); one that could never fit is admitted with
         `pages=None` for the engine to reject."""
-        if not self.pending or self.pending[0].arrival_time > now:
+        i = self._select_pending(now)
+        if i is None:
             return None
+        cand = self.pending[i]
         if self.pages is not None:
-            head = self.pending[0]
-            tokens = head.prompt_len + head.max_new_tokens
+            tokens = cand.prompt_len + cand.max_new_tokens
             fits = self.pages.fits_ever(tokens)
             needed = self.pages.pages_needed(tokens)
             if fits and needed > self.pages.free_pages:
                 # count *requests* that waited, not poll attempts — the
                 # loop re-asks every chunk tick while the head is blocked
-                if head.rid not in self._blocked_rids:
-                    self._blocked_rids.add(head.rid)
+                if cand.rid not in self._blocked_rids:
+                    self._blocked_rids.add(cand.rid)
                     self.page_blocks += 1
                 return None
-        req = self.pending.popleft()
+        req = cand
+        del self.pending[i]
+        if i > 0:
+            self.tier_affine_picks += 1
         if self.pages is not None:
             req.pages = self.pages.alloc(needed) if fits else None
         req.slot = slot_idx
@@ -266,13 +317,18 @@ class SlotScheduler:
     def drained(self) -> bool:
         return not self.pending and self.num_active() == 0
 
-    def observe(self, chunk_tokens: np.ndarray, now: float):
+    def observe(self, chunk_tokens: np.ndarray, now: float,
+                mode: str = "exact"):
         """Consume one decode chunk: (steps, B) tokens fetched from device.
 
         Row s of the chunk is the token each slot emitted at step s. Tokens
         for free slots, and steps after a slot finished mid-chunk, are
         discarded (the device keeps decoding every row; the garbage never
         reaches a request).
+
+        `mode` is the datapath the engine ran this chunk on ("exact" |
+        "approx"); accepted tokens are credited to (tier, mode) for the
+        energy accounting.
         """
         steps, B = chunk_tokens.shape
         assert B == self.n_slots, (B, self.n_slots)
@@ -280,14 +336,18 @@ class SlotScheduler:
             for i, slot in enumerate(self.slots):
                 if slot.req is None:
                     continue
-                self._accept(slot, slot.req, int(chunk_tokens[s, i]), now)
+                self._accept(slot, slot.req, int(chunk_tokens[s, i]), now,
+                             mode=mode)
         self.depth_samples.append(len(self.pending))
         if self.pages is not None and self.pages.capacity:
             self.page_util_samples.append(
                 self.pages.in_use / self.pages.capacity)
 
-    def _accept(self, slot: _Slot, req: Request, token: int, now: float):
+    def _accept(self, slot: _Slot, req: Request, token: int, now: float,
+                mode: str = "exact"):
         req.tokens.append(token)
+        key = (req.tier, mode)
+        self.tier_mode_tokens[key] = self.tier_mode_tokens.get(key, 0) + 1
         if token == self.eos_id:
             self._finish(slot, req, "eos", now)
         elif req.n_generated >= req.max_new_tokens:
@@ -337,6 +397,16 @@ class SlotScheduler:
         rates = [r.decode_tok_s for r in done if r.decode_tok_s]
         if rates:
             out["decode_tok_s_mean_per_req"] = float(np.mean(rates))
+        if any(r.tier != "premium" for r in done) or any(
+                m != "exact" for _, m in self.tier_mode_tokens):
+            # tier section only when the stream actually used the knob
+            out["tier_requests"] = {
+                t: sum(1 for r in done if r.tier == t) for t in TIERS
+                if any(r.tier == t for r in done)}
+            out["tier_mode_tokens"] = {
+                f"{t}/{m}": n
+                for (t, m), n in sorted(self.tier_mode_tokens.items())}
+            out["tier_affine_picks"] = self.tier_affine_picks
         if self.pages is not None:
             out |= {
                 "page_size": self.pages.page_size,

@@ -127,11 +127,11 @@ def restore(path: str, target_tree, step: int | None = None,
     with open(os.path.join(cdir, "manifest.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
     leaves, treedef = _flatten(target_tree)
-    assert len(leaves) == len(manifest["leaves"]), \
-        (len(leaves), len(manifest["leaves"]), "tree structure changed")
+    assert len(leaves) == len(manifest["leaves"]), (
+        len(leaves), len(manifest["leaves"]), "tree structure changed")
     out = []
-    shard_leaves = jax.tree.leaves(shardings) if shardings is not None \
-        else [None] * len(leaves)
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(leaves))
     for meta, ref, shard in zip(manifest["leaves"], leaves, shard_leaves):
         arr = np.load(os.path.join(cdir, meta["file"]))
         if arr.dtype.kind == "V":      # npy stores bf16/fp8 as raw void

@@ -54,8 +54,8 @@ class AdamW:
         grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
         # global-norm clip
         gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)))
-        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-12)) \
-            if self.clip_norm else 1.0
+        scale = (jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-12))
+                 if self.clip_norm else 1.0)
         grads = jax.tree.map(lambda g: g * scale, grads)
         count = state.count + 1
         b1, b2 = self.b1, self.b2
@@ -72,5 +72,5 @@ class AdamW:
             return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
 
         new_params = jax.tree.map(step, params, mu, nu)
-        return new_params, AdamWState(count=count, mu=mu, nu=nu), \
-            {"grad_norm": gnorm, "lr": lr}
+        return (new_params, AdamWState(count=count, mu=mu, nu=nu),
+                {"grad_norm": gnorm, "lr": lr})

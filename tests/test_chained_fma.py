@@ -6,8 +6,8 @@ import pytest
 from conftest import given, settings, st  # hypothesis or skip-stub shim
 
 from repro.core import chained_fma as cf
-from repro.core.fpformats import BF16, FP8_E4M3, FP8_E5M2, FP16, get_format, \
-    quantize_np
+from repro.core.fpformats import (BF16, FP8_E4M3, FP8_E5M2, FP16, get_format,
+                                  quantize_np)
 
 
 def bits(x):

@@ -144,9 +144,10 @@ def test_ssd_chunked_vs_naive_recurrence():
         ys = []
         for t in range(T):
             dA = np.exp(np.asarray(dt[:, t]) * np.asarray(A))  # (B, H)
-            S = S * dA[..., None, None] + \
-                (np.asarray(dt[:, t])[..., None] * np.asarray(x[:, t]))[..., None] \
-                * np.asarray(B_[:, t])[:, None, None, :]
+            dx = (np.asarray(dt[:, t])[..., None]
+                  * np.asarray(x[:, t]))[..., None]
+            S = (S * dA[..., None, None]
+                 + dx * np.asarray(B_[:, t])[:, None, None, :])
             ys.append(np.einsum("bn,bhpn->bhp", np.asarray(C_[:, t]), S))
         want = np.stack(ys, axis=1)
         np.testing.assert_allclose(np.asarray(y), want, rtol=2e-4, atol=2e-4)

@@ -133,8 +133,8 @@ def test_paged_matches_ring_staggered_arrivals(dense_setup):
         paged, _ = _serve(cfg, params, "paged", prompts, [3, 3, 4],
                           arrivals=arrivals, clock=lambda: 0.0,
                           page_size=16)
-    assert {r.rid: r.tokens for r in paged.finished} \
-        == {r.rid: r.tokens for r in ring.finished}
+    assert ({r.rid: r.tokens for r in paged.finished}
+            == {r.rid: r.tokens for r in ring.finished})
     assert all(r.ttft == 0.0 for r in paged.finished)
 
 

@@ -18,11 +18,11 @@ from repro.core.systolic import (BASELINE, CYCLES_PER_ROW, EXTRA_STAGES,
 
 def test_tile_latency_formulas():
     # baseline: 2 cycles per row of the reduction chain (Fig. 4)
-    assert tile_latency(M=1, r_used=128, c_used=1, pipeline=BASELINE) \
-        == 2 * 128 + 0 + 1 + 1
+    assert (tile_latency(M=1, r_used=128, c_used=1, pipeline=BASELINE)
+            == 2 * 128 + 0 + 1 + 1)
     # skewed: 1 cycle per row + extra trailing add stage (Fig. 6)
-    assert tile_latency(M=1, r_used=128, c_used=1, pipeline=SKEWED) \
-        == 128 + 0 + 1 + 2
+    assert (tile_latency(M=1, r_used=128, c_used=1, pipeline=SKEWED)
+            == 128 + 0 + 1 + 2)
 
 
 def test_skew_saves_r_cycles_per_tile():
@@ -83,8 +83,8 @@ def test_paper_area_power_constants():
     assert E.REL_POWER[SKEWED] == 1.07              # paper: +7 % power
     skew = SAConfig(pipeline=SKEWED)
     base = SAConfig(pipeline=BASELINE)
-    assert E.array_area_mm2(skew) / E.array_area_mm2(base) \
-        == pytest.approx(1.09)
+    assert (E.array_area_mm2(skew) / E.array_area_mm2(base)
+            == pytest.approx(1.09))
 
 
 def test_per_layer_energy_crossover():
@@ -160,8 +160,8 @@ def _simulate_gemm(M: int, K: int, N: int, sa: SAConfig) -> int:
 @pytest.mark.parametrize("pipeline", [BASELINE, SKEWED])
 def test_tile_latency_matches_cycle_simulation(pipeline):
     for M, r, c in itertools.product((1, 2, 4, 9), (1, 2, 5, 8), (1, 3, 8)):
-        assert tile_latency(M, r, c, pipeline) \
-            == _simulate_tile(M, r, c, pipeline), (M, r, c, pipeline)
+        assert (tile_latency(M, r, c, pipeline)
+                == _simulate_tile(M, r, c, pipeline)), (M, r, c, pipeline)
 
 
 @pytest.mark.parametrize("pipeline", [BASELINE, SKEWED])
@@ -170,8 +170,8 @@ def test_gemm_latency_matches_cycle_simulation(pipeline):
     (r_used < rows) on the last K and N tile are exercised."""
     sa = SAConfig(rows=8, cols=8, pipeline=pipeline)
     for M, K, N in itertools.product((1, 5, 17), (3, 8, 20), (1, 6, 16)):
-        assert gemm_latency(M, K, N, sa) == _simulate_gemm(M, K, N, sa), \
-            (M, K, N, pipeline)
+        assert gemm_latency(M, K, N, sa) == _simulate_gemm(M, K, N, sa), (
+            M, K, N, pipeline)
 
 
 @pytest.mark.parametrize("pipeline", [BASELINE, SKEWED])

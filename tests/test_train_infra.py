@@ -159,8 +159,8 @@ def test_error_feedback_unbiased_over_time():
         resid = gj - back
         applied_sum += np.asarray(back)
     # residual bounded by one quantization step, not growing
-    assert np.abs(applied_sum - true_sum).max() \
-        <= float(jnp.abs(resid).max()) + 1e-5
+    assert (np.abs(applied_sum - true_sum).max()
+            <= float(jnp.abs(resid).max()) + 1e-5)
     assert float(jnp.abs(resid).max()) < 0.05
 
 

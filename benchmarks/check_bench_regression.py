@@ -4,9 +4,10 @@ baseline.
     python benchmarks/check_bench_regression.py BENCH_kernels.json \
         benchmarks/BENCH_baseline.json --rtol 0.2
 
-Compares the ``tuned_us`` column of the ``autotune`` and ``decode`` tables
-(the tuned SA-GEMM / decode-GEMV latencies) row by row against the
-baseline. Interpret-mode wall times vary with runner speed, so by default
+Compares the ``tuned_us`` column of the ``autotune``, ``decode`` and
+``decode_attn`` tables (the tuned SA-GEMM / decode-GEMV latencies and the
+fused paged decode-attention kernel) row by row against the baseline.
+Interpret-mode wall times vary with runner speed, so by default
 each ratio is normalized by a **machine-speed reference outside the
 compared set**: the ``backend`` table's ``sa_dot_xla_*`` row (a plain
 lax.dot_general timing the SA kernels can't regress). A uniformly slower
@@ -15,7 +16,9 @@ tuned rows still stands out against the unchanged XLA reference. If the
 reference row is missing from either file it falls back to the median
 new/base ratio of the compared rows (which can only catch regressions
 hitting a minority of rows). Disable with ``--no-normalize`` when both
-files come from the same machine.
+files come from the same machine. Noisier tables can carry a wider
+per-table tolerance (``RTOL_BY_TABLE``); ``--rtol`` raises but never
+tightens those.
 
 Exit codes: 0 ok, 1 regression, 2 usage/schema error.
 """
@@ -26,8 +29,12 @@ import json
 import statistics
 import sys
 
-COMPARED_TABLES = ("autotune", "decode")
+COMPARED_TABLES = ("autotune", "decode", "decode_attn")
 REFERENCE_TABLE, REFERENCE_PREFIX = "backend", "sa_dot_xla_"
+# interpret-mode attention rows (B unrolled pallas calls, ms-scale) drift
+# more run-to-run than the GEMM microbenches; gate them looser so the
+# check catches real slowdowns without tripping on scheduler noise
+RTOL_BY_TABLE = {"decode_attn": 0.4}
 
 
 def load_rows(path: str) -> tuple[dict[tuple[str, str], float], float | None]:
@@ -84,10 +91,12 @@ def main(argv=None) -> int:
     bad = []
     for key, ratio in sorted(ratios.items()):
         norm = ratio / scale
-        flag = "REGRESSED" if norm > 1.0 + args.rtol else "ok"
+        rtol = max(args.rtol, RTOL_BY_TABLE.get(key[0], args.rtol))
+        flag = "REGRESSED" if norm > 1.0 + rtol else "ok"
         print(f"{flag:9s} {key[0]}/{key[1]}: {base[key]:.1f}us -> "
-              f"{new[key]:.1f}us (x{ratio:.2f}, normalized x{norm:.2f})")
-        if norm > 1.0 + args.rtol:
+              f"{new[key]:.1f}us (x{ratio:.2f}, normalized x{norm:.2f}, "
+              f"rtol +{rtol:.0%})")
+        if norm > 1.0 + rtol:
             bad.append(key)
     print(f"machine-speed scale: x{scale:.2f} over {len(ratios)} rows "
           f"(threshold +{args.rtol:.0%})")

@@ -43,6 +43,9 @@ The GEMM backend itself (xla | pallas | emulate) is a string knob, not a
 bool flag: `gemm_backend()` reads REPRO_GEMM_BACKEND (default "xla") and
 seeds `core.precision.DEFAULT_POLICY`, so the whole stack — layers, train
 step, benchmarks — is A/B-able end-to-end from one environment variable.
+`decode_attn_impl()` (REPRO_DECODE_ATTN, default "fused") is the same
+pattern for the paged decode-attention path: fused Pallas page walk vs the
+gather+dense fallback.
 """
 from __future__ import annotations
 
@@ -92,6 +95,27 @@ def gemm_backend() -> str:
         raise ValueError(
             f"REPRO_GEMM_BACKEND={backend!r}; want one of {_GEMM_BACKENDS}")
     return backend
+
+
+_DECODE_ATTN_IMPLS = ("fused", "gather")
+
+
+def decode_attn_impl() -> str:
+    """Paged decode-attention implementation (reads REPRO_DECODE_ATTN at
+    call time, same contract as `gemm_backend`). "fused" (default) walks
+    the block table inside the Pallas kernel
+    (kernels/sa_decode_attention.py); "gather" is the A/B fallback that
+    materializes the dense gathered view and runs jnp `decode_attention`
+    on top — kept exactly like REPRO_KV=ring keeps the dense ring. The two
+    are pinned bit-identical (tests/test_decode_kernel.py), so the knob
+    A/Bs only the data movement. Consulted at trace time in
+    models/layers.py; policies the kernel can't reproduce (FP8 inputs,
+    non-fp32 output rounding) fall back to "gather" regardless."""
+    impl = os.environ.get("REPRO_DECODE_ATTN", "fused")
+    if impl not in _DECODE_ATTN_IMPLS:
+        raise ValueError(
+            f"REPRO_DECODE_ATTN={impl!r}; want one of {_DECODE_ATTN_IMPLS}")
+    return impl
 
 
 _SA_MODES = ("exact", "approx")

@@ -42,7 +42,9 @@ import numpy as np
 from .sa_matmul import clip_blocks, default_blocks, sa_matmul_pallas
 
 _VERSION = 1
-_MEM: dict[str, tuple[int, int, int]] = {}
+# entry values are block tuples: (bm, bn, bk) for GEMM keys, (ppb, hb) for
+# the paged decode-attention keys ("|dattn|" — pages_per_block, head tiling)
+_MEM: dict[str, tuple[int, ...]] = {}
 _DISK_LOADED = False
 
 # candidate (bm, bn, bk) shapes; clipped to the problem and deduped per
@@ -120,10 +122,11 @@ def _load_disk_once():
     _DISK_LOADED = True
     for key, ent in _read_disk().items():
         try:
-            bm, bn, bk = (int(x) for x in ent["blocks"])
-            _MEM.setdefault(key, (bm, bn, bk))
+            blocks = tuple(int(x) for x in ent["blocks"])
         except (KeyError, TypeError, ValueError):
             continue
+        if blocks:
+            _MEM.setdefault(key, blocks)
 
 
 @contextlib.contextmanager
@@ -272,3 +275,127 @@ def lookup(m: int, n: int, k: int, *, dtype: str = "bfloat16",
     # sweep can still take over this key (the disk cache is only read once
     # per process, so cross-process updates need a restart to be seen)
     return default_blocks(m, n, k)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode-attention grid shapes (kernels/sa_decode_attention.py)
+# ---------------------------------------------------------------------------
+
+# (pages_per_block, kv_heads_per_block) candidates; clipped to divisors of
+# (max_pages, KVH) per workload and deduped. More pages per grid step
+# amortizes per-step overhead; head tiling trades grid steps for VMEM.
+DECODE_ATTN_CANDIDATES = (
+    (1, 1),
+    (2, 1),
+    (4, 1),
+    (8, 1),
+    (2, 2),
+    (4, 2),
+)
+
+
+def decode_attn_key(batch: int, kvh: int, g: int, hd: int, psz: int,
+                    max_pages: int, dtype: str) -> str:
+    return (f"{backend_key()}|dattn|{batch}x{kvh}x{g}x{hd}|"
+            f"{psz}x{max_pages}|{dtype}")
+
+
+def default_decode_attn_blocks(kvh: int, max_pages: int) -> tuple[int, int]:
+    """Heuristic: walk up to 8 pages per grid step, one KV head."""
+    from .sa_decode_attention import largest_divisor
+    return largest_divisor(max_pages, 8), 1
+
+
+def decode_attn_candidates(kvh: int, max_pages: int
+                           ) -> list[tuple[int, int]]:
+    from .sa_decode_attention import largest_divisor
+    # (max_pages, kvh) collapses the page/head axes into a single grid
+    # step — the interpret-mode winner (no while-loop carry copies) and a
+    # legitimate TPU shape for small pools
+    pool = DECODE_ATTN_CANDIDATES + (
+        (max_pages, 1), (max_pages, kvh),
+        default_decode_attn_blocks(kvh, max_pages))
+    seen, out = set(), []
+    for ppb, hb in pool:
+        c = (largest_divisor(max_pages, ppb), largest_divisor(kvh, hb))
+        if c not in seen:
+            seen.add(c)
+            out.append(c)
+    return out
+
+
+def tune_decode_attn(batch: int, kvh: int, g: int, hd: int, psz: int,
+                     max_pages: int, *, dtype: str | None = None,
+                     mapped_pages: int | None = None, reps: int = 2
+                     ) -> tuple[tuple[int, int], list[dict]]:
+    """Sweep (pages_per_block, head tiling) for one paged decode-attention
+    workload; cache and return the winner, `tune()`-style.
+
+    Timed on a synthetic pool with `mapped_pages` pages mapped per slot
+    (default: half the block table — the mid-sparsity regime serving
+    actually sits in). Serving engines call this once at startup
+    (`launch/serve.py --autotune-decode`): the jitted decode chunk cannot
+    sweep mid-trace, so winners must be on disk/in memory before the first
+    chunk compiles.
+    """
+    from .sa_decode_attention import sa_paged_decode_attention
+    dtype = dtype or production_dtype()
+    mapped = mapped_pages or max(1, max_pages // 2)
+    mapped = min(mapped, max_pages)
+    rng = np.random.default_rng(0)
+    n_pages = batch * max_pages + 1
+    dt = jnp.dtype(dtype)
+    k_pool = jnp.asarray(rng.standard_normal((n_pages, psz, kvh, hd)), dt)
+    v_pool = jnp.asarray(rng.standard_normal((n_pages, psz, kvh, hd)), dt)
+    bt = np.full((batch, max_pages), -1, np.int32)
+    for b in range(batch):
+        bt[b, :mapped] = 1 + b * max_pages + np.arange(mapped)
+    page_pos = np.full((n_pages, psz), -1, np.int32)
+    for b in range(batch):
+        page_pos[bt[b, :mapped].reshape(-1)] = np.arange(
+            mapped * psz, dtype=np.int32).reshape(mapped, psz)
+    bt, page_pos = jnp.asarray(bt), jnp.asarray(page_pos)
+    pos = jnp.full((batch,), mapped * psz - 1, jnp.int32)
+    q = jnp.asarray(rng.standard_normal((batch, 1, kvh * g, hd)), dt)
+    interpret = jax.default_backend() != "tpu"
+
+    def time_one(ppb, hb):
+        def run():
+            return sa_paged_decode_attention(
+                q, k_pool, v_pool, page_pos, bt, pos, ppb=ppb, hb=hb,
+                interpret=interpret)
+        run().block_until_ready()      # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = run()
+        out.block_until_ready()
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    table = [{"blocks": c, "us": time_one(*c)}
+             for c in decode_attn_candidates(kvh, max_pages)]
+    table.sort(key=lambda r: r["us"])
+    best = tuple(table[0]["blocks"])
+    key = decode_attn_key(batch, kvh, g, hd, psz, max_pages, dtype)
+    _MEM[key] = best
+    _write_disk(key, best, table[0]["us"])
+    return best, table
+
+
+def lookup_decode_attn(batch: int, kvh: int, g: int, hd: int, psz: int,
+                       max_pages: int, *, dtype: str | None = None,
+                       sweep: bool | None = None) -> tuple[int, int]:
+    """Best-known (pages_per_block, head tiling): memory → disk →
+    (optional sweep) → heuristic. Same contract as `lookup`: consulted at
+    trace time by `sa_paged_decode_attention`, never sweeps mid-trace."""
+    _load_disk_once()
+    dtype = dtype or production_dtype()
+    hit = _MEM.get(decode_attn_key(batch, kvh, g, hd, psz, max_pages, dtype))
+    if hit is not None and len(hit) == 2:
+        return hit
+    if sweep is None:
+        sweep = os.environ.get("REPRO_AUTOTUNE", "0") not in ("0", "false",
+                                                              "off")
+    if sweep and _trace_state_clean():
+        return tune_decode_attn(batch, kvh, g, hd, psz, max_pages,
+                                dtype=dtype)[0]
+    return default_decode_attn_blocks(kvh, max_pages)

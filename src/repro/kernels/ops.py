@@ -18,6 +18,10 @@ from .sa_matmul import sa_matmul_pallas
 from .fp_emu import fma_emu_matmul
 from .quantize import quantize_fp8, amax_scale
 from .sa_attention import sa_attention as _sa_attention
+from .sa_decode_attention import (
+    fused_decode_supported,
+    sa_paged_decode_attention as _sa_paged_decode_attention,
+)
 
 INTERPRET = jax.default_backend() != "tpu"
 
@@ -27,6 +31,17 @@ def sa_attention(q, k, v, **kw):
     sa_attention.py). Forward-only; GQA/causal/window/softcap."""
     kw.setdefault("interpret", INTERPRET)
     return _sa_attention(q, k, v, **kw)
+
+
+def paged_decode_attention(q, k_pool, v_pool, page_positions, block_table,
+                           pos, **kw):
+    """Fused paged decode attention (see sa_decode_attention.py): walks the
+    block table inside the kernel instead of gathering a dense view in HBM.
+    Bit-identical to `gather_pages` + `decode_attention`; grid shapes
+    (pages_per_block, head tiling) resolve through the autotune cache."""
+    kw.setdefault("interpret", INTERPRET)
+    return _sa_paged_decode_attention(q, k_pool, v_pool, page_positions,
+                                      block_table, pos, **kw)
 
 
 def sa_matmul(a: jax.Array, w: jax.Array, *, bias: jax.Array | None = None,
@@ -74,5 +89,6 @@ def skewed_datapath_matmul(a: jax.Array, w: jax.Array,
 
 
 __all__ = ["sa_matmul", "sa_matmul_fp8", "skewed_datapath_matmul",
-           "sa_attention", "quantize_fp8", "amax_scale", "autotune",
-           "INTERPRET"]
+           "sa_attention", "paged_decode_attention",
+           "fused_decode_supported", "quantize_fp8", "amax_scale",
+           "autotune", "INTERPRET"]

@@ -1,0 +1,282 @@
+"""Pallas TPU kernel: fused paged-attention decode (flash-decoding style).
+
+The paged serving layout (DESIGN.md §5) stores KV in a global page pool with
+per-slot block tables. The jnp decode path gathers every slot's mapped pages
+into a dense ``(B, max_pages·page_size, KVH, hd)`` view in HBM each token,
+each layer — a bandwidth tax proportional to the block-table capacity, not to
+the tokens actually attended. This kernel walks ``block_table[b]`` directly:
+the grid runs over (batch-slot, KV-head block, page block), and a
+scalar-prefetch-driven index map fetches each step's pages straight from the
+pool into VMEM, so the dense gathered view never exists in HBM — the paged
+gather happens inside the kernel's memory hierarchy (the Gemmini
+scratchpad/mvin idiom restated in Pallas).
+
+Numerics are pinned **bit-for-bit** to ``gather_pages`` + ``decode_attention``
+(tests/test_decode_kernel.py): scores run under the SA contract
+(``PrecisionPolicy.cast_in`` per operand — elementwise, so quantizing page
+blocks in VMEM ≡ quantizing the gathered view — fp32 accumulate, same
+softcap/window/GQA semantics), the running row max is maintained online
+across the page walk (max is order-invariant, so it is exact), and the
+exponential/normalize/PV reduction is deferred to the final grid step — the
+softmax analogue of the paper's round-once column: unnormalized state across
+the chain, one normalization at the end. Unmapped block-table entries and the
+reserved trash page (id 0) are masked inside the kernel: their score lanes
+are written as -inf and their V lanes as 0 without touching the pool (a free
+slot's garbage rows can hold NaNs — 0·NaN would poison the PV dot), and
+``pl.when`` skips their score work entirely, which is why sparse block tables
+get cheaper while the dense gather path keeps paying for full capacity.
+
+Grid/block shapes are autotuned (`kernels/autotune.py`): ``pages_per_block``
+(how many pages one grid step fetches — one BlockSpec per page offset, all
+indexed through the prefetched block table) and ``heads_per_block`` (KV-head
+tiling). Both must divide their axis; `sa_paged_decode_attention` clips.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .pltpu_compat import CompilerParams as _CompilerParams
+from .sa_matmul import truncate_mantissa
+
+_SUPPORTED_INPUT_FORMATS = ("fp32", "bf16", "fp16")
+_INPUT_DTYPE = {"bf16": jnp.bfloat16, "fp16": jnp.float16}
+
+
+def fused_decode_supported(policy) -> bool:
+    """True when the fused kernel reproduces the jnp path for `policy`.
+
+    FP8 inputs quantize through `fpformats.quantize` (grid snapping, not a
+    dtype cast) and non-fp32 output formats round through the same machinery
+    — both stay on the gather+dense path rather than re-implementing them
+    in-kernel. `models/layers.py` consults this before dispatching.
+    """
+    return (policy.input_format in _SUPPORTED_INPUT_FORMATS
+            and policy.output_format == "fp32")
+
+
+def _exact_containers() -> bool:
+    # read at trace time: the dry-run flips precision.EXACT_CPU_CONTAINERS
+    # off in-process to lower the TPU-true bf16 program
+    from repro.core import precision
+    return precision.EXACT_CPU_CONTAINERS
+
+
+def _cast_in(x, fmt: str):
+    """`PrecisionPolicy.cast_in` restated for in-kernel use (fp32/bf16/fp16
+    only — see `fused_decode_supported`). Elementwise, so casting each page
+    block in VMEM is bit-identical to casting the gathered dense view."""
+    if fmt == "fp32":
+        return x.astype(jnp.float32)
+    q = x.astype(_INPUT_DTYPE[fmt])
+    return q.astype(jnp.float32) if _exact_containers() else q
+
+
+def _container_dtype(fmt: str):
+    """Dtype the cast-in operands (and the V scratch) actually carry."""
+    if fmt == "fp32" or _exact_containers():
+        return jnp.float32
+    return _INPUT_DTYPE[fmt]
+
+
+def largest_divisor(n: int, cap: int) -> int:
+    """Largest divisor of `n` that is <= cap (>= 1)."""
+    d = max(1, min(int(cap), int(n)))
+    while n % d:
+        d -= 1
+    return d
+
+
+def _decode_kernel(bt_ref, pos_ref, q_ref, *refs, ppb: int, hb: int,
+                   psz: int, n_steps: int, scale: float, window: int,
+                   cap: float, fmt: str, approx: bool):
+    """One grid step: fetch `ppb` pages for `hb` KV heads, score them into
+    the (hb, g, S) score scratch, stage their cast-in V rows; the final step
+    runs the deferred softmax + PV dot. refs layout (positional, after the
+    two scalar-prefetch refs and the q ref): k×ppb, v×ppb, page-pos×ppb,
+    out, score scratch, V scratch."""
+    k_refs, v_refs = refs[:ppb], refs[ppb:2 * ppb]
+    pp_refs = refs[2 * ppb:3 * ppb]
+    o_ref, s_buf, v_buf = refs[3 * ppb], refs[3 * ppb + 1], refs[3 * ppb + 2]
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    my_pos = pos_ref[b]
+    q = _cast_in(q_ref[0], fmt)                       # (hb, g, hd)
+
+    for i in range(ppb):
+        slot = j * ppb + i                            # block-table column
+        # id 0 is the reserved trash page: stale decode writes land there,
+        # so an explicit 0 entry is as dead as an unmapped (-1) one
+        mapped = bt_ref[b, slot] > 0
+        k_ref, v_ref, pp_ref = k_refs[i], v_refs[i], pp_refs[i]
+
+        @pl.when(mapped)
+        def _score(k_ref=k_ref, v_ref=v_ref, pp_ref=pp_ref, slot=slot):
+            k = _cast_in(k_ref[0], fmt)               # (psz, hb, hd)
+            v = _cast_in(v_ref[0], fmt)
+            kvp = pp_ref[0]                           # (psz,)
+            ok = (kvp >= 0) & (kvp <= my_pos)
+            if window:
+                ok &= kvp > my_pos - window
+            for t in range(hb):
+                # per-head 2-D dot: contraction over hd in fp32, exactly the
+                # per-(b, h) slice of the dense path's batched einsum
+                s = jax.lax.dot_general(
+                    q[t], k[:, t], (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                if approx:
+                    s = truncate_mantissa(s)
+                # constants folded on the host: single-mul→tanh is the only
+                # fusion-stable form (see decode_attention's softcap note)
+                s = cap * jnp.tanh(s * (scale / cap)) if cap else s * scale
+                s = jnp.where(ok[None, :], s, -jnp.inf)
+                s_buf[t, :, pl.ds(slot * psz, psz)] = s
+            v_buf[:, pl.ds(slot * psz, psz), :] = v.swapaxes(0, 1)
+
+        @pl.when(jnp.logical_not(mapped))
+        def _mask_out(slot=slot):
+            # no pool read at all: score lanes -inf, V lanes 0 (the dense
+            # path zeroes gathered trash-page rows for the same reason)
+            s_buf[:, :, pl.ds(slot * psz, psz)] = jnp.full(
+                (*s_buf.shape[:2], psz), -jnp.inf, s_buf.dtype)
+            v_buf[:, pl.ds(slot * psz, psz), :] = jnp.zeros(
+                (v_buf.shape[0], psz, v_buf.shape[2]), v_buf.dtype)
+
+    @pl.when(j == n_steps - 1)
+    def _normalize_once():
+        s = s_buf[...]                                # (hb, g, S)
+        m = jnp.max(s, axis=-1)
+        # all-masked rows (slot with zero live entries) keep m = -inf; the
+        # guard makes them exp(-inf - 0) = 0 instead of exp(nan)
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+        for t in range(hb):
+            pq = _cast_in(p[t].astype(q_ref.dtype), fmt)
+            out = jax.lax.dot_general(
+                pq, v_buf[t], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            if approx:
+                out = truncate_mantissa(out)
+            o_ref[0, t] = out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "cap", "scale", "ppb", "hb", "fmt",
+                              "approx", "interpret"))
+def _paged_decode(qg, k_pool, v_pool, page_positions, block_table, pos, *,
+                  window: int, cap: float, scale: float, ppb: int, hb: int,
+                  fmt: str, approx: bool, interpret: bool):
+    B, KVH, g, hd = qg.shape
+    psz = k_pool.shape[1]
+    P = block_table.shape[1]
+
+    def page_idx(i):
+        # the prefetched block table drives the pool index: unmapped (-1)
+        # entries clamp to the trash page, whose block the kernel never reads
+        return lambda b, h, j, bt, ps: (jnp.maximum(bt[b, j * ppb + i], 0),
+                                        0, h, 0)
+
+    def pagepos_idx(i):
+        return lambda b, h, j, bt, ps: (jnp.maximum(bt[b, j * ppb + i], 0), 0)
+
+    def run(qb, btb, posb):
+        bb = qb.shape[0]
+        grid = (bb, KVH // hb, P // ppb)
+        in_specs = [pl.BlockSpec((1, hb, g, hd),
+                                 lambda b, h, j, bt, ps: (b, h, 0, 0))]
+        in_specs += [pl.BlockSpec((1, psz, hb, hd), page_idx(i))
+                     for i in range(ppb)]
+        in_specs += [pl.BlockSpec((1, psz, hb, hd), page_idx(i))
+                     for i in range(ppb)]
+        in_specs += [pl.BlockSpec((1, psz), pagepos_idx(i))
+                     for i in range(ppb)]
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, hb, g, hd),
+                                   lambda b, h, j, bt, ps: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((hb, g, P * psz), jnp.float32),
+                pltpu.VMEM((hb, P * psz, hd), _container_dtype(fmt)),
+            ],
+        )
+        kernel = functools.partial(_decode_kernel, ppb=ppb, hb=hb, psz=psz,
+                                   n_steps=grid[2], scale=scale,
+                                   window=window, cap=cap, fmt=fmt,
+                                   approx=approx)
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((bb, KVH, g, hd), jnp.float32),
+            compiler_params=_CompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary")),
+            interpret=interpret,
+        )(btb.astype(jnp.int32), posb.astype(jnp.int32), qb,
+          *([k_pool] * ppb), *([v_pool] * ppb), *([page_positions] * ppb))
+
+    if interpret and B > 1:
+        # Interpret-mode lowering runs the grid as an XLA while loop whose
+        # carry holds EVERY operand — each step past the first re-writes
+        # all 3·ppb pool-sized carries (measured ~3 ms/step at a 4 MB
+        # pool), while a single-step grid folds the loop away entirely.
+        # The batch axis would force >= B steps, so on CPU we unroll it
+        # into B independent single-slot calls instead; each one can then
+        # collapse to one grid step when (ppb, hb) = (P, KVH). Numerics
+        # are per-(b, h) slices either way — bit-identical. On TPU the
+        # batched grid stands: steps are real parallel work there, and
+        # the pools are never in any carry.
+        return jnp.concatenate(
+            [run(qg[b:b + 1], block_table[b:b + 1], pos[b:b + 1])
+             for b in range(B)], axis=0)
+    return run(qg, block_table, pos)
+
+
+def sa_paged_decode_attention(q, k_pool, v_pool, page_positions, block_table,
+                              pos, *, window: int = 0, cap: float = 0.0,
+                              scale: float | None = None,
+                              ppb: int | None = None, hb: int | None = None,
+                              policy=None, interpret: bool = False):
+    """Fused paged decode attention.
+
+    q: (B, 1, H, hd); pools: (n_pages, psz, KVH, hd);
+    page_positions: (n_pages, psz) int32 (-1 = empty);
+    block_table: (B, max_pages) int32 page ids (-1 = unmapped, 0 = trash);
+    pos: (B,) per-slot current position. → (B, 1, H, hd) fp32.
+
+    Bit-identical to ``decode_attention(q, *gather_pages(cache), pos)`` for
+    every supported policy (`fused_decode_supported`). `ppb`/`hb` default to
+    the autotuned `pages_per_block` / KV-head tiling for this workload
+    (`autotune.lookup_decode_attn`); explicit values are clipped to
+    divisors, so any (ppb, hb) is safe to pin.
+    """
+    from repro.core.precision import current_policy
+    policy = policy or current_policy()
+    if not fused_decode_supported(policy):
+        raise ValueError(
+            f"fused paged decode does not support input_format="
+            f"{policy.input_format!r} / output_format="
+            f"{policy.output_format!r}; use the gather path")
+    B, _, H, hd = q.shape
+    psz, KVH = k_pool.shape[1], k_pool.shape[2]
+    P = block_table.shape[1]
+    g = H // KVH
+    scale = scale or hd ** -0.5
+    if ppb is None or hb is None:
+        from . import autotune
+        tppb, thb = autotune.lookup_decode_attn(B, KVH, g, hd, psz, P)
+        ppb, hb = ppb or tppb, hb or thb
+    ppb = largest_divisor(P, ppb)
+    hb = largest_divisor(KVH, hb)
+    out = _paged_decode(q.reshape(B, KVH, g, hd), k_pool, v_pool,
+                        page_positions, block_table, pos,
+                        window=int(window), cap=float(cap or 0.0),
+                        scale=float(scale), ppb=ppb, hb=hb,
+                        fmt=policy.input_format,
+                        approx=policy.mode == "approx", interpret=interpret)
+    return out.reshape(B, 1, H, hd)

@@ -50,7 +50,8 @@ def build_requests(sched: SlotScheduler, cfg, n: int, rate: float,
                      tier=tier)
 
 
-def preseed_decode_blocks(cfg, batch: int):
+def preseed_decode_blocks(cfg, batch: int, page_size: int | None = None,
+                          max_pages: int | None = None):
     """Sweep decode-shape GEMV blocks before serving starts.
 
     The jitted decode step cannot sweep mid-trace (autotune.lookup falls
@@ -60,7 +61,12 @@ def preseed_decode_blocks(cfg, batch: int):
     FFN up/down, lm head — at M = batch (the decode GEMMs flatten
     (B, 1, D) to (B, D), so batch IS the GEMM M; other Ms would never be
     consulted). Epilogue-fused keys (e.g. the silu'd gate) fall back to
-    these bare-GEMM entries (autotune.lookup's documented fallback)."""
+    these bare-GEMM entries (autotune.lookup's documented fallback).
+
+    When the engine serves the paged KV layout (`page_size`/`max_pages`
+    given), also sweeps the fused decode-attention grid shapes
+    (pages_per_block, heads_per_block) for the exact workload the chunk fn
+    will lower — same cannot-sweep-mid-trace constraint, same cache."""
     from repro.kernels import autotune
 
     dtype = autotune.production_dtype()
@@ -72,11 +78,21 @@ def preseed_decode_blocks(cfg, batch: int):
         shapes |= {(ff, d), (d, ff)}
     for n, k in sorted(shapes):
         autotune.tune_decode(n, k, ms=(batch,), dtype=dtype, reps=2)
+    if page_size and max_pages:
+        kvh = cfg.num_kv_heads
+        autotune.tune_decode_attn(batch, kvh, cfg.num_heads // kvh, hd,
+                                  page_size, max_pages, reps=2)
 
 
 def serve_continuous(args, cfg, params, plens) -> dict:
     if args.autotune_decode:
-        preseed_decode_blocks(cfg, args.batch)
+        import os as _os
+        paged = (args.kv or _os.environ.get("REPRO_KV", "paged")) == "paged"
+        seq = args.max_seq_len or args.cache_len
+        max_pages = -(-seq // args.page_size) if paged else None
+        preseed_decode_blocks(cfg, args.batch,
+                              page_size=args.page_size if paged else None,
+                              max_pages=max_pages)
     engine = ServeEngine(cfg, params, args.batch, args.cache_len,
                          eos_id=args.eos_id, sync_every=args.sync_every,
                          kv_layout=args.kv, page_size=args.page_size,

@@ -287,12 +287,27 @@ def decode_attention(q, k_cache, v_cache, kv_positions, pos, *, window=0,
     scale = scale or hd ** -0.5
     qg = q.reshape(B, KVH, g, hd)
     s = sa_einsum("bhgd,bkhd->bhgk", qg, k_cache).astype(jnp.float32)
-    s = softcap(s * scale, cap)
+    # softcap with the constants folded on the host: a mul→div→tanh chain
+    # is NOT fusion-stable on XLA CPU (eager vs jit codegen round the
+    # intermediate differently), while single-mul→tanh is — and the fused
+    # paged kernel computes this exact expression, so the bit-parity pin
+    # (tests/test_decode_kernel.py) holds in every execution regime
+    s = cap * jnp.tanh(s * (scale / cap)) if cap else s * scale
     ok = (kv_positions >= 0) & (kv_positions <= pos[:, None])
     if window:
         ok &= kv_positions > pos[:, None] - window
     s = jnp.where(ok[:, None, None, :], s, -jnp.inf)
-    p = jax.nn.softmax(s, axis=-1)
+    # safe-row softmax: a slot with zero valid cache entries (freshly freed
+    # slot, wholly-unmapped block table) is a row of -inf, which
+    # jax.nn.softmax turns into NaNs. Guarding the max keeps exp() at
+    # exactly 0 and the floor on the normalizer yields an all-zero row;
+    # non-empty rows have l >= 1 (the max element contributes exp(0) = 1),
+    # so the maximum() never engages and the result is bit-identical to
+    # jax.nn.softmax. The fused paged kernel carries the same guard.
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
     out = sa_einsum("bhgk,bkhd->bhgd", p.astype(q.dtype), v_cache)
     return out.reshape(B, 1, H, hd)
 
@@ -332,12 +347,15 @@ def gather_pages(cache: PagedKVCache):
     Unmapped block-table entries gather the trash page; their k/v are
     zeroed (a free slot's garbage row can carry NaNs — and 0·NaN = NaN
     would leak through the masked softmax) and positions forced to -1, so
-    they are masked out exactly like empty dense-ring entries.
+    they are masked out exactly like empty dense-ring entries. An explicit
+    page-0 entry is treated as unmapped too: id 0 is the reserved trash
+    page the allocator never hands out, and the fused decode kernel masks
+    it the same way — the two paths must agree on every block table.
     """
     B, P = cache.block_table.shape
     psz = cache.k.shape[1]
     safe = jnp.maximum(cache.block_table, 0)              # (B, P)
-    mapped = (cache.block_table >= 0)[:, :, None]         # (B, P, 1)
+    mapped = (cache.block_table > 0)[:, :, None]          # (B, P, 1)
     kvhd = cache.k.shape[2:]
     k = jnp.where(mapped[..., None, None], cache.k[safe], 0)
     v = jnp.where(mapped[..., None, None], cache.v[safe], 0)
@@ -460,12 +478,27 @@ def attention_block(x, p, cfg, meta, positions, cache: KVCache | None = None,
         v_c = cache.v.at[pid, off].set(v[:, 0].astype(cache.v.dtype))
         pos_c = cache.positions.at[pid, off].set(pos.astype(jnp.int32))
         new_cache = PagedKVCache(k_c, v_c, pos_c, cache.block_table)
-        # attention gathers over the slot's mapped pages only; page order in
-        # the block table is allocation order == sequence order, so the
-        # gathered view is position-sorted exactly like a non-wrapped ring
-        k_g, v_g, pos_g = gather_pages(new_cache)
-        o = decode_attention(q, k_g, v_g, pos_g, pos, window=window,
-                             cap=cfg.attn_softcap)
+        # attention over the slot's mapped pages only; page order in the
+        # block table is allocation order == sequence order, so the paged
+        # view is position-sorted exactly like a non-wrapped ring. Default
+        # impl is the fused Pallas kernel walking the block table in-kernel
+        # (no dense gathered view in HBM); REPRO_DECODE_ATTN=gather keeps
+        # the materializing path as the bit-identical A/B fallback, and
+        # policies the kernel can't reproduce (FP8 in, non-fp32 out) fall
+        # back automatically.
+        from repro.core import optflags
+        from repro.core.precision import current_policy
+        from repro.kernels import ops as K
+        impl = optflags.decode_attn_impl()
+        if impl == "fused" and K.fused_decode_supported(current_policy()):
+            o = K.paged_decode_attention(
+                q, new_cache.k, new_cache.v, new_cache.positions,
+                new_cache.block_table, pos, window=window,
+                cap=cfg.attn_softcap)
+        else:
+            k_g, v_g, pos_g = gather_pages(new_cache)
+            o = decode_attention(q, k_g, v_g, pos_g, pos, window=window,
+                                 cap=cfg.attn_softcap)
     elif cache is not None and x.shape[1] == 1:
         # per-slot ring write: row b of the batch is an independent request
         # at its own depth, so each row scatters into its own ring slot

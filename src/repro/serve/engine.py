@@ -42,7 +42,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core import optflags
 from repro.core.precision import current_policy, use_policy
+from repro.kernels.ops import fused_decode_supported
 from repro.models.config import ArchConfig
 from repro.models import model as M
 from repro.models.layers import KVCache, PagedKVCache
@@ -507,6 +509,14 @@ class ServeEngine:
         summary |= {"prefill_s": round(prefill_s, 4),
                     "decode_s": round(decode_s, 4),
                     "wall_s": round(now(), 4)}
+        if paged:
+            # which decode-attention path actually lowered into the chunk fn
+            # (the knob is read at trace time; FP8 / non-fp32-out policies
+            # fall back to gather regardless of the env setting)
+            impl = optflags.decode_attn_impl()
+            if impl == "fused" and not fused_decode_supported(current_policy()):
+                impl = "gather"
+            summary["decode_attn"] = impl
         served = summary["requests"] - summary["rejected"]
         if decode_s > 0 and served:
             # each *served* request's first token came from prefill, not

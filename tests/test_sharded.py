@@ -86,6 +86,9 @@ def test_sharded_train_step_and_compressed_psum():
 _PAGED_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+# pin the fused Pallas page-walk kernel: the decode cell must lower it
+# under SPMD, not silently fall back to the gather path
+os.environ["REPRO_DECODE_ATTN"] = "fused"
 import json
 import jax
 from jax.sharding import PartitionSpec as P
@@ -124,7 +127,10 @@ print(json.dumps({"ok_pages": bool(ok_pages), "k_spec": str(k_spec),
 def test_paged_decode_cell_lowers_on_mesh():
     """The paged decode cell (global page pool sharded over `data`, KV
     heads over `model`, replicated block table) must lower and compile on
-    a multi-device host mesh — the serving analogue of the dry-run."""
+    a multi-device host mesh — the serving analogue of the dry-run. Runs
+    with REPRO_DECODE_ATTN=fused pinned, so the fused Pallas page-walk
+    kernel itself must partition (batch over `data`, KV heads over
+    `model`), not just the jnp gather fallback."""
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     out = subprocess.run([sys.executable, "-c", _PAGED_SCRIPT], env=env,

@@ -118,6 +118,22 @@ def decode_attn_impl() -> str:
     return impl
 
 
+def prefix_cache_enabled() -> bool:
+    """Prefix sharing + copy-on-write on the paged KV (reads
+    REPRO_PREFIX_CACHE at call time, default on). When on, paged serve
+    engines key whole-page prompt-prefix runs by
+    (config fingerprint, tier, token ids) and map cache hits into new
+    block tables with refcount bumps instead of re-prefilling
+    (serve/scheduler.PageAllocator). "0" falls back to the allocate-and-
+    prefill-everything path — kept as an A/B exactly like
+    REPRO_DECODE_ATTN=gather; the two are pinned token-identical in
+    tests/test_paged_kv.py. Engines additionally auto-disable sharing for
+    layouts where a page is not a pure function of the prompt (local-
+    window dense rings, ssm/hybrid states)."""
+    return os.environ.get("REPRO_PREFIX_CACHE", "1") not in (
+        "0", "false", "off")
+
+
 _SA_MODES = ("exact", "approx")
 
 

@@ -12,6 +12,16 @@ continuous engine is text-only for now — with the same honest accounting:
 tok/s counts real generated tokens (nothing past EOS), and prefill vs
 decode wall time are reported separately.
 
+`--prefix-mix p` prepends one fixed `--prefix-len`-token system prompt to
+a fraction p of the requests: with the prefix cache on (REPRO_PREFIX_CACHE,
+default 1, paged layout) those requests prefill the shared span once and
+later admissions map the cached pages with refcount bumps — the summary's
+`prefix_hits` / `prefix_tokens_saved` / `pages_cached` fields and the lower
+`pages_peak_in_use` / `prefill_s` quantify the win, and TTFT stays honest
+(it times the suffix prefill a hit actually pays, not the full prefill it
+skipped). The same seed with `REPRO_PREFIX_CACHE=0` serves the identical
+stream without sharing — outputs are pinned token-identical.
+
 `--tier-mix p` marks each request "bulk" with probability p (seeded):
 bulk requests may decode on the approximate-normalization datapath (the
 coarse-LZA design of arxiv 2408.11997 — see core/chained_fma.approx_*)
@@ -37,14 +47,25 @@ from repro.serve.scheduler import SlotScheduler
 
 def build_requests(sched: SlotScheduler, cfg, n: int, rate: float,
                    prompt_lens: list[int], max_new: int, seed: int,
-                   tier_mix: float = 0.0):
+                   tier_mix: float = 0.0, prefix_mix: float = 0.0,
+                   prefix_len: int = 32):
+    """Queue `n` synthetic requests. `prefix_mix p` prepends one fixed
+    `prefix_len`-token system prompt (drawn once per run) to a fraction p
+    of the requests — the shared-system-prompt fleet the prefix cache
+    multiplies: under REPRO_PREFIX_CACHE=1 those prompts prefill the shared
+    span once and later admissions map the cached pages. The request
+    stream is a pure function of `seed`, so A/B runs with the cache on and
+    off serve the identical workload."""
     rng = np.random.default_rng(seed)
+    system = rng.integers(0, cfg.vocab_size, prefix_len)
     t = 0.0
     for i in range(n):
         if rate > 0:
             t += float(rng.exponential(1.0 / rate))
         plen = prompt_lens[i % len(prompt_lens)]
         prompt = rng.integers(0, cfg.vocab_size, plen)
+        if rng.random() < prefix_mix:
+            prompt = np.concatenate([system, prompt])
         tier = "bulk" if rng.random() < tier_mix else "premium"
         sched.submit(prompt, max_new_tokens=max_new, arrival_time=t,
                      tier=tier)
@@ -100,7 +121,8 @@ def serve_continuous(args, cfg, params, plens) -> dict:
                          max_seq_len=args.max_seq_len)
     sched = SlotScheduler(args.batch, eos_id=args.eos_id)
     build_requests(sched, cfg, args.requests, args.rate, plens,
-                   args.max_new, args.seed, tier_mix=args.tier_mix)
+                   args.max_new, args.seed, tier_mix=args.tier_mix,
+                   prefix_mix=args.prefix_mix, prefix_len=args.prefix_len)
     summary = engine.serve(sched, greedy=True)
     for r in sorted(sched.finished, key=lambda r: r.rid):
         # rejected requests never started: no TTFT / rate to report
@@ -195,6 +217,14 @@ def main(argv=None):
                          "long request without growing every slot")
     ap.add_argument("--sync-every", type=int, default=8,
                     help="decode steps per host sync / scheduler tick")
+    ap.add_argument("--prefix-mix", type=float, default=0.0,
+                    help="fraction of requests sharing one fixed system "
+                         "prompt — the prefix-cache workload (REPRO_PREFIX_"
+                         "CACHE=1|0 A/Bs sharing on the same stream; TTFT "
+                         "stays honest, timing only the suffix prefill a "
+                         "cache hit actually pays)")
+    ap.add_argument("--prefix-len", type=int, default=32,
+                    help="shared system-prompt length for --prefix-mix")
     ap.add_argument("--tier-mix", type=float, default=0.0,
                     help="fraction of requests submitted as the 'bulk' "
                          "quality tier (approximate-normalization decode "
@@ -210,7 +240,10 @@ def main(argv=None):
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     params = M.init_params(jax.random.key(args.seed), cfg)
     plens = [int(x) for x in args.prompt_lens.split(",")]
-    args.cache_len = args.cache_len or (max(plens) + args.max_new)
+    # prefix-mix prompts grow by the shared system prompt; size the default
+    # per-request capacity to still fit them
+    extra = args.prefix_len if args.prefix_mix > 0 else 0
+    args.cache_len = args.cache_len or (max(plens) + extra + args.max_new)
 
     if cfg.family == "vlm" or cfg.is_encdec:
         summary = serve_static(args, cfg, params, plens)

@@ -420,12 +420,17 @@ def _pad_heads(q, k, v, kvh_target: int):
 
 def attention_block(x, p, cfg, meta, positions, cache: KVCache | None = None,
                     pos=None, rope: bool = True, causal: bool = True,
-                    kv_override=None):
+                    kv_override=None, prefix_len: int = 0):
     """Full attention sub-layer. Returns (out, new_cache).
 
     meta: layer descriptor {"attn": "global"|"local"}. If `cache` is given and
     x is a single token, runs the decode path (ring-buffer update for local
     layers). `kv_override` supplies cross-attention K/V source outputs.
+    `prefix_len` (static) engages continued prefill: the dense cache's first
+    `prefix_len` rows already hold KV for positions [0, prefix_len) — the
+    serve engine's prefix-cache hits load them from shared pool pages — and
+    x carries only the uncached suffix, whose KV is written at offset
+    `prefix_len` and whose queries attend over [prefix ‖ suffix].
     """
     from repro.parallel import sharding as S_
     window = cfg.window if meta.get("attn") == "local" else 0
@@ -514,7 +519,22 @@ def attention_block(x, p, cfg, meta, positions, cache: KVCache | None = None,
                              cap=cfg.attn_softcap)
     else:
         from repro.core import optflags
-        if cache is not None and optflags.enabled("pallas_attention"):
+        if cache is not None and prefix_len:
+            # continued prefill (serve prefix-cache hit): suffix queries
+            # attend over [cached prefix ‖ fragment] at their absolute
+            # offset. The concat keeps the kv length — and therefore the
+            # flash kv tiling and online-softmax accumulation order —
+            # identical to a full prefill of the whole prompt, and the
+            # cache round-trip is value-preserving (fp32 cache, or a bf16
+            # cache of values the SA contract re-quantizes to bf16 anyway),
+            # so the suffix rows come out bit-identical to full prefill.
+            kp = cache.k[:, :prefix_len].astype(k.dtype)
+            vp = cache.v[:, :prefix_len].astype(v.dtype)
+            o = blockwise_attention(
+                q, jnp.concatenate([kp, k], axis=1),
+                jnp.concatenate([vp, v], axis=1), causal=causal,
+                window=window, cap=cfg.attn_softcap, q_offset=prefix_len)
+        elif cache is not None and optflags.enabled("pallas_attention"):
             # serving prefill is forward-only: use the Pallas flash kernel
             # (VMEM-resident softmax state; kernels/sa_attention.py)
             from repro.kernels.ops import sa_attention
@@ -539,6 +559,9 @@ def attention_block(x, p, cfg, meta, positions, cache: KVCache | None = None,
             k = k.astype(cache.k.dtype)
             v = v.astype(cache.v.dtype)
             if T >= S:                   # keep last S positions (ring)
+                assert not prefix_len, (
+                    "continued prefill needs prefix_len + suffix <= cache "
+                    "capacity (the engine sizes fragments to whole prompts)")
                 bidx = jnp.arange(k.shape[0])[:, None]
                 k_keep, v_keep = k[:, -S:], v[:, -S:]
                 pos_keep = positions[:, -S:].astype(jnp.int32)   # (B, S)
@@ -548,11 +571,14 @@ def attention_block(x, p, cfg, meta, positions, cache: KVCache | None = None,
                 v_c = jnp.zeros_like(cache.v).at[bidx, slots].set(v_keep)
                 pos_c = (jnp.full_like(cache.positions, -1)
                          .at[bidx, slots].set(pos_keep))
-            else:
-                k_c = lax.dynamic_update_slice_in_dim(cache.k, k, 0, axis=1)
-                v_c = lax.dynamic_update_slice_in_dim(cache.v, v, 0, axis=1)
+            else:                        # suffix rows land after the prefix
+                k_c = lax.dynamic_update_slice_in_dim(
+                    cache.k, k, prefix_len, axis=1)
+                v_c = lax.dynamic_update_slice_in_dim(
+                    cache.v, v, prefix_len, axis=1)
                 pos_c = lax.dynamic_update_slice_in_dim(
-                    cache.positions, positions.astype(jnp.int32), 0, axis=1)
+                    cache.positions, positions.astype(jnp.int32), prefix_len,
+                    axis=1)
             new_cache = KVCache(k_c, v_c, pos_c)
     o = o[:, :, :H_orig]   # drop padded q-head outputs before the projection
     return attn_out(o, p), new_cache

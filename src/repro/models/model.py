@@ -244,7 +244,8 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int,
 # Forward
 # ---------------------------------------------------------------------------
 
-def _sublayer(x, p, cfg, meta, positions, cache, pos, encoder_out):
+def _sublayer(x, p, cfg, meta, positions, cache, pos, encoder_out,
+              prefix_len: int = 0):
     """One transformer layer. Returns (x, new_cache)."""
     new_cache: dict[str, Any] = {}
     h = L.norm_apply(x, p["norm1"], cfg.norm, cfg.norm_eps)
@@ -259,7 +260,7 @@ def _sublayer(x, p, cfg, meta, positions, cache, pos, encoder_out):
     if cfg.hybrid:
         a, kv = L.attention_block(h, p["attn"], cfg, meta, positions,
                                   cache=cache.get("kv") if cache else None,
-                                  pos=pos)
+                                  pos=pos, prefix_len=prefix_len)
         ssm_cache = cache.get("ssm") if cache else None
         s, st = mamba2_block(h, p["ssm"], cfg,
                              state=ssm_cache[0] if ssm_cache else None,
@@ -271,7 +272,7 @@ def _sublayer(x, p, cfg, meta, positions, cache, pos, encoder_out):
     else:
         mix, kv = L.attention_block(h, p["attn"], cfg, meta, positions,
                                     cache=cache.get("kv") if cache else None,
-                                    pos=pos)
+                                    pos=pos, prefix_len=prefix_len)
         if cache is not None:
             new_cache["kv"] = kv
     x = x + mix.astype(x.dtype)
@@ -339,14 +340,18 @@ def encode(params, cfg: ArchConfig, frontend_embeds):
 
 
 def forward(params, cfg: ArchConfig, tokens, *, positions=None, cache=None,
-            pos=None, frontend_embeds=None, last_only: bool = False):
+            pos=None, frontend_embeds=None, last_only: bool = False,
+            prefix_len: int = 0):
     """Token ids (B, T) → logits. Returns (logits, new_cache, aux).
 
     `cache`/`pos` engage the decode path; `pos` is a (B,) int32 vector of
     per-sequence positions (each batch row — serving *slot* — may be at its
     own depth; a scalar is broadcast for single-sequence callers).
     `frontend_embeds` feeds the modality stub (vlm: prepended to the text
-    sequence; audio: encoder input for cross-attention).
+    sequence; audio: encoder input for cross-attention). `prefix_len`
+    (static) is the continued-prefill offset: `tokens` holds only a
+    prompt's uncached suffix and the dense cache's first `prefix_len` rows
+    hold pre-loaded KV (serve prefix-cache hits; see layers.attention_block).
     """
     B, T = tokens.shape
     compute_dtype = jnp.bfloat16
@@ -360,6 +365,10 @@ def forward(params, cfg: ArchConfig, tokens, *, positions=None, cache=None,
         T = x.shape[1]
     elif cfg.is_encdec and frontend_embeds is not None:
         encoder_out = encode(params, cfg, frontend_embeds.astype(compute_dtype))
+    if pos is None and prefix_len:
+        # continued prefill: positions (and a 1-token suffix's decode-path
+        # write) start at the first uncached token
+        pos = prefix_len
     if pos is not None:
         pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     if positions is None:
@@ -388,7 +397,8 @@ def forward(params, cfg: ArchConfig, tokens, *, positions=None, cache=None,
         for j in range(period):
             c_j = None if cache_sb is None else cache_sb[j]
             x, extra = _sublayer(x, p_sb[j], cfg, cfg.layer_kind(j),
-                                 positions, c_j, pos, encoder_out)
+                                 positions, c_j, pos, encoder_out,
+                                 prefix_len)
             if cache_sb is not None:
                 new_caches.append(extra)
             elif isinstance(extra, dict):   # moe aux losses

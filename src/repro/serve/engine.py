@@ -101,10 +101,17 @@ class ServeEngine:
         self._frag_floor = (cfg.window if has_local and cfg.window
                             and cfg.window < self.max_seq_len else 1)
         self._prefill = jax.jit(make_prefill_step(cfg))
+        # continued-prefill variants, one jitted closure per shared-prefix
+        # length (prefix_len is trace-time state like the arithmetic mode);
+        # drivers already quantize prompt lengths, and shared spans are
+        # page-quantized, so the population stays small
+        self._prefills: dict[int, Any] = {0: self._prefill}
         self._serve_step = make_serve_step(cfg)
         self._chunks: dict[tuple[int, bool, str], Any] = {}
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
         self._clear_slot = jax.jit(self._clear_slot_impl, donate_argnums=(0,))
+        self._load_prefix = jax.jit(self._load_prefix_impl,
+                                    static_argnums=(3,), donate_argnums=(0,))
         self.last_stats: dict[str, float] = {}
 
     def new_cache(self, batch: int | None = None):
@@ -124,18 +131,41 @@ class ServeEngine:
         cap = _round_up(max(prompt_len, self._frag_floor), self.page_size)
         return M.init_cache(self.cfg, 1, cap, dtype=self.cache_dtype)
 
+    def prefix_caching_on(self) -> bool:
+        """Prefix sharing is sound only when every prompt page is a pure
+        function of the prompt tokens (+ engine config): paged layout, no
+        local-window dense rings (their fragment floor couples neighbours),
+        no per-slot recurrent state (ssm/hybrid). REPRO_PREFIX_CACHE=0
+        forces the allocate-and-prefill-everything fallback."""
+        return (optflags.prefix_cache_enabled()
+                and self.kv_layout == "paged"
+                and self._frag_floor == 1
+                and self.cfg.family != "ssm" and not self.cfg.hybrid)
+
+    def _fingerprint(self) -> str:
+        """Cache-key component isolating engines whose pages would not be
+        interchangeable: arch/config, cache dtype, GEMM backend. The
+        arithmetic *mode* (premium-exact vs bulk-approx) is keyed per
+        request tier by the allocator, not here."""
+        import hashlib
+        raw = f"{self.cfg!r}|{jnp.dtype(self.cache_dtype).name}|" \
+              f"{optflags.gemm_backend()}"
+        return hashlib.sha1(raw.encode()).hexdigest()[:16]
+
     def new_allocator(self) -> PageAllocator:
         return PageAllocator(
             self.pool_pages, self.page_size,
             max_request_pages=self.max_pages,
-            min_request_tokens=self._frag_floor)
+            min_request_tokens=self._frag_floor,
+            prefix_caching=self.prefix_caching_on(),
+            fingerprint=self._fingerprint())
 
     # ------------------------------------------------------------------
     # jitted building blocks
     # ------------------------------------------------------------------
 
     @staticmethod
-    def _insert_impl(cache, frag, slot, block_row=None):
+    def _insert_impl(cache, frag, slot, block_row=None, keep=0):
         """Splice a batch-1 cache fragment into batch row `slot`.
 
         Dense leaves (rings, SSM/conv state, per-slot positions) carry
@@ -145,15 +175,30 @@ class ServeEngine:
         after wiping the positions of *every* page in `block_row` to -1 —
         recycled pages still hold the previous owner's positions, which
         would otherwise be visible to the attention mask. `block_row` is
-        the slot's (max_pages,) block-table row, -1-padded."""
+        the slot's (max_pages,) block-table row, -1-padded.
+
+        `keep` (prefix sharing) is the count of leading block-row pages that
+        are cache-hit SHARED pages: they already hold the right KV, other
+        readers may be attending to them concurrently, and this slot must
+        never write them — both the wipe and the scatter redirect those
+        pages to the reserved trash page 0 (writes there are harmless by
+        the same convention unmapped decode writes rely on). A COW'd tail
+        page is NOT kept: its rows ride in the fragment (pre-loaded from
+        the donor) and the scatter into the request's own page IS the
+        copy-on-write."""
         def splice(full, one):
             if isinstance(full, PagedKVCache):
                 n_super, n_pages, psz = full.k.shape[:3]
                 s_frag = one.k.shape[2]
                 npp = s_frag // psz
                 lane = jnp.arange(psz, dtype=jnp.int32)
-                dest = (block_row[:npp, None] * psz + lane).reshape(-1)
-                wipe = (jnp.where(block_row >= 0, block_row, 0)[:, None]
+                dest_row = jnp.where(jnp.arange(npp) < keep, 0,
+                                     block_row[:npp])
+                dest = (dest_row[:, None] * psz + lane).reshape(-1)
+                wipe_row = jnp.where(block_row >= 0, block_row, 0)
+                wipe_row = jnp.where(
+                    jnp.arange(block_row.shape[0]) < keep, 0, wipe_row)
+                wipe = (wipe_row[:, None]
                         * psz + lane).reshape(-1)   # page 0 wipe: harmless
                 kf = full.k.reshape(n_super, n_pages * psz, *full.k.shape[3:])
                 vf = full.v.reshape(n_super, n_pages * psz, *full.v.shape[3:])
@@ -180,6 +225,47 @@ class ServeEngine:
         return jax.tree.map(
             splice, cache, frag,
             is_leaf=lambda x: isinstance(x, (KVCache, PagedKVCache)))
+
+    @staticmethod
+    def _load_prefix_impl(frag, cache, src_row, prefix_len: int):
+        """Load a shared prompt prefix from pool pages into a dense
+        prefill fragment's first `prefix_len` rows (the continued prefill
+        attends over them; layers.attention_block).
+
+        `src_row` holds the ceil(prefix_len / psz) source page ids in
+        sequence order: the cache-hit whole pages, plus — on a tail hit —
+        the DONOR's partial page as the last entry (its rows are gathered
+        here and later scattered into the request's own page by `_insert`,
+        which completes the copy-on-write without a separate device pass).
+        Positions are rebuilt as arange(prefix_len): by construction row t
+        of a registered prompt run holds position t, and the donor's rows
+        past the shared span (its own decode tokens) are cropped by the
+        `[:prefix_len]` slice."""
+        def load(one, full):
+            if not isinstance(full, PagedKVCache):
+                return one
+            n_super, _, psz = full.k.shape[:3]
+            lane = jnp.arange(psz, dtype=jnp.int32)
+            src = (src_row[:, None] * psz + lane).reshape(-1)[:prefix_len]
+            kf = full.k.reshape(n_super, -1, *full.k.shape[3:])[:, src]
+            vf = full.v.reshape(n_super, -1, *full.v.shape[3:])[:, src]
+            return KVCache(
+                one.k.at[:, 0, :prefix_len].set(kf.astype(one.k.dtype)),
+                one.v.at[:, 0, :prefix_len].set(vf.astype(one.v.dtype)),
+                one.positions.at[:, 0, :prefix_len].set(
+                    jnp.arange(prefix_len, dtype=jnp.int32)))
+
+        return jax.tree.map(
+            load, frag, cache,
+            is_leaf=lambda x: isinstance(x, (KVCache, PagedKVCache)))
+
+    def _prefill_for(self, prefix_len: int):
+        """Jitted prefill closure for one static shared-prefix length."""
+        fn = self._prefills.get(prefix_len)
+        if fn is None:
+            fn = jax.jit(make_prefill_step(self.cfg, prefix_len))
+            self._prefills[prefix_len] = fn
+        return fn
 
     @staticmethod
     def _clear_slot_impl(cache, slot):
@@ -445,8 +531,27 @@ class ServeEngine:
                 t_p = now()
                 frag = (self.new_frag(req.prompt_len) if paged
                         else self.new_cache(batch=1))
-                logits, frag = self._prefill(
-                    self.params, jnp.asarray(req.prompt, jnp.int32)[None],
+                shared = req.shared_tokens if paged else 0
+                if shared:
+                    # prefix-cache hit: pre-load the shared span's KV from
+                    # the hit pages (plus the COW donor's partial tail) and
+                    # prefill only the uncached suffix — TTFT below stays
+                    # honest, it times the load + suffix prefill actually
+                    # paid, not a full prefill that never ran
+                    src = list(req.pages[:shared // self.page_size])
+                    if req.cow_src is not None:
+                        src.append(req.cow_src)
+                    frag = self._load_prefix(
+                        frag, cache, jnp.asarray(src, jnp.int32), shared)
+                    if req.cow_src is not None:
+                        # the donor's rows are in the fragment now; the
+                        # insert below writes them into the request's own
+                        # tail page (the copy), so the donor's copy-window
+                        # lease can drop
+                        scheduler.cow_done(req)
+                logits, frag = self._prefill_for(shared)(
+                    self.params,
+                    jnp.asarray(req.prompt[shared:], jnp.int32)[None],
                     frag, None)
                 if greedy:
                     first = int(np.asarray(jnp.argmax(logits[0, -1])))
@@ -458,7 +563,17 @@ class ServeEngine:
                     row = np.full((self.max_pages,), -1, np.int32)
                     row[:len(req.pages)] = req.pages
                     cache = self._insert(cache, frag, slot,
-                                         jnp.asarray(row))
+                                         jnp.asarray(row),
+                                         jnp.asarray(
+                                             shared // self.page_size,
+                                             jnp.int32))
+                    # register this prompt's pages for reuse BEFORE the
+                    # scheduler sees the first token: a first-token EOS
+                    # retires the request immediately, and the registered
+                    # pages must park as cached, not return to the free
+                    # list
+                    scheduler.pages.prefix_register(req.prompt, req.pages,
+                                                    req.tier)
                 else:
                     cache = self._insert(cache, frag, slot)
                 tok = tok.at[slot].set(first)

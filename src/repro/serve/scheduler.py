@@ -44,7 +44,7 @@ Semantics
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
+from collections import OrderedDict, deque
 
 import numpy as np
 
@@ -52,17 +52,55 @@ TIERS = ("premium", "bulk")
 
 
 class PageAllocator:
-    """Host-side free list over the global KV page pool.
+    """Host-side refcounted free list over the global KV page pool, with an
+    optional prefix cache.
 
     Page ids `[reserved, n_pages)` are allocatable; ids below `reserved`
     (default: page 0, the trash page decode writes of unmapped slots land
     in — see models/layers.py PagedKVCache) are never handed out.
     `max_request_pages` caps one request (the device block table's width).
+
+    Every allocatable page carries a **refcount** — the number of live
+    request leases mapping it. `alloc` hands out pages at refcount 1;
+    `retain` bumps a shared page for an additional reader (prefix-cache
+    hit); `free` releases one lease per page and only returns a page to the
+    free list when its refcount reaches 0 *and* the prefix cache is not
+    holding it. A page is therefore in exactly one of three states:
+
+      free    — on the free deque (mirrored by `_free_set`, kept in
+                lockstep so double-free detection is O(1), not a
+                set-rebuild per retirement)
+      leased  — refcount ≥ 1: mapped into at least one live block table
+      cached  — refcount 0 but registered in the prefix index: its content
+                (a prompt-prefix KV run) is retained for future admissions
+                and reclaimed lazily under pool pressure (LRU run order)
+
+    `pages_leaked` accounting is the remainder: in_use − leased − cached,
+    which must stay 0 — cached-but-unleased prefix pages are *not* leaks.
+
+    Prefix cache (`prefix_caching=True`): prompts are indexed at page
+    granularity. Boundary key i maps `(fingerprint, tier, tokens[:i·psz])`
+    to the page holding that whole page of prompt KV; an additional *tail*
+    key maps the full prompt to its last partial page. Lookup walks the
+    chain for the longest cached whole-page run (capped so at least one
+    prompt token is always left to prefill — the admission needs last-token
+    logits), then checks the tail key for an exact full-prompt match. The
+    key carries the request **tier** because the approximate-normalization
+    tiers (DESIGN.md §6) make the arithmetic mode part of a page's
+    identity: a bulk stream must never be served a premium-exact prefix
+    (or vice versa) or the divergence-probe premium-identity guarantee
+    silently breaks. `fingerprint` isolates engines (params/config/dtype).
+
+    Cached pages are strictly read-only: anyone who must write into a
+    cached or multiply-leased page (the first divergent token of a fork)
+    copies it first — copy-on-write, orchestrated by the engine via
+    `cow_fork` accounting here.
     """
 
     def __init__(self, n_pages: int, page_size: int,
                  max_request_pages: int | None = None, reserved: int = 1,
-                 min_request_tokens: int = 1):
+                 min_request_tokens: int = 1, prefix_caching: bool = False,
+                 fingerprint: str = ""):
         assert n_pages > reserved, (n_pages, reserved)
         self.n_pages = int(n_pages)
         self.page_size = int(page_size)
@@ -74,7 +112,23 @@ class PageAllocator:
         # must cover that floor too (see engine.new_frag)
         self.min_request_tokens = int(min_request_tokens)
         self._free = deque(range(reserved, n_pages))
-        self.peak_in_use = 0
+        self._free_set = set(self._free)      # lockstep mirror of _free
+        self._refcount = [0] * n_pages
+        self.leased = 0                       # pages with refcount >= 1
+        self.peak_in_use = 0                  # high-water mark of `leased`
+        # prefix cache state
+        self.prefix_caching = bool(prefix_caching)
+        self.fingerprint = str(fingerprint)
+        self._index: dict[tuple, int] = {}    # boundary/tail key -> page id
+        self._page_key: dict[int, tuple] = {}  # inverse (1:1 — a page is
+        #                                        registered under one key)
+        # run = the set of keys ONE registration added, LRU-ordered; the
+        # eviction unit (evicting a chain's middle entry would orphan the
+        # deeper pages, so whole runs go at once)
+        self._runs: OrderedDict[tuple, list[tuple]] = OrderedDict()
+        self._run_of_key: dict[tuple, tuple] = {}
+        self.prefix_evictions = 0             # runs reclaimed under pressure
+        self.cow_forks = 0
 
     @property
     def capacity(self) -> int:
@@ -89,6 +143,22 @@ class PageAllocator:
     def in_use(self) -> int:
         return self.capacity - self.free_pages
 
+    @property
+    def cached(self) -> int:
+        """Pages retained only by the prefix cache (refcount 0)."""
+        return sum(1 for p in self._page_key if self._refcount[p] == 0)
+
+    @property
+    def leaked(self) -> int:
+        """Pages neither free, leased, nor cached — must always be 0."""
+        return self.in_use - self.leased - self.cached
+
+    def _note_peak(self):
+        # called wherever lease counts change — alloc, retain, free — so
+        # refcount-bump admissions (cache hits that allocate nothing)
+        # register peaks too, not just fresh allocations
+        self.peak_in_use = max(self.peak_in_use, self.leased)
+
     def pages_needed(self, tokens: int) -> int:
         tokens = max(int(tokens), self.min_request_tokens, 1)
         return -(-tokens // self.page_size)
@@ -98,19 +168,197 @@ class PageAllocator:
         n = self.pages_needed(tokens)
         return n <= min(self.capacity, self.max_request_pages)
 
+    # ------------------------------------------------------------------
+    # lease lifecycle
+    # ------------------------------------------------------------------
+
+    def _push_free(self, p: int):
+        assert p not in self._free_set, ("double free", p)
+        self._free.append(p)
+        self._free_set.add(p)
+
+    def _pop_free(self) -> int:
+        p = self._free.popleft()
+        self._free_set.remove(p)
+        return p
+
+    def allocatable(self, exclude: set[int] | None = None) -> int:
+        """Pages an alloc could obtain right now: free plus cached pages in
+        fully-idle runs (reclaimable via eviction). Runs containing any page
+        in `exclude` are not counted — admission passes the pages it is
+        about to retain, which pin their runs against eviction."""
+        exclude = exclude or set()
+        n = len(self._free)
+        for keys in self._runs.values():
+            pages = [self._index[k] for k in keys]
+            if any(self._refcount[p] > 0 for p in pages):
+                continue
+            if exclude and not exclude.isdisjoint(pages):
+                continue
+            n += len(pages)
+        return n
+
+    def _evict_for(self, n: int):
+        """Reclaim LRU fully-idle cached runs until `n` pages are free."""
+        for run_id in list(self._runs):
+            if len(self._free) >= n:
+                break
+            keys = self._runs[run_id]
+            if any(self._refcount[self._index[k]] > 0 for k in keys):
+                continue   # some page still leased: the run stays
+            for k in keys:
+                page = self._index.pop(k)
+                del self._page_key[page]
+                del self._run_of_key[k]
+                self._push_free(page)
+            del self._runs[run_id]
+            self.prefix_evictions += 1
+
     def alloc(self, n: int) -> list[int] | None:
-        """Pop `n` pages, or None if they aren't free right now."""
-        if n > len(self._free) or n > self.max_request_pages:
+        """Lease `n` fresh pages (refcount 1 each), evicting idle cached
+        prefix runs if the free list alone can't cover them; None if they
+        aren't obtainable right now."""
+        if n > self.max_request_pages:
             return None
-        pages = [self._free.popleft() for _ in range(n)]
-        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        if n > len(self._free):
+            self._evict_for(n)
+        if n > len(self._free):
+            return None
+        pages = [self._pop_free() for _ in range(n)]
+        for p in pages:
+            assert self._refcount[p] == 0, p
+            self._refcount[p] = 1
+        self.leased += n
+        self._note_peak()
         return pages
 
-    def free(self, pages: list[int]):
+    def retain(self, pages: list[int]):
+        """Add one lease per page (prefix-cache hit: a new block table maps
+        already-resident pages; nothing is allocated)."""
         for p in pages:
             assert self.reserved <= p < self.n_pages, p
-        assert not set(pages) & set(self._free), "double free"
-        self._free.extend(pages)
+            assert p not in self._free_set, ("retain of a free page", p)
+            if self._refcount[p] == 0:
+                self.leased += 1
+            self._refcount[p] += 1
+        self._note_peak()
+
+    def free(self, pages: list[int]):
+        """Release one lease per page. A page whose last lease drops goes
+        back to the free list unless the prefix cache retains it (then it
+        parks as `cached` until evicted)."""
+        for p in pages:
+            assert self.reserved <= p < self.n_pages, p
+            assert self._refcount[p] > 0, ("double free", p)
+            self._refcount[p] -= 1
+            if self._refcount[p] == 0:
+                self.leased -= 1
+                if p not in self._page_key:
+                    self._push_free(p)
+        self._note_peak()
+
+    def cow_fork(self, donor: int):
+        """Account a copy-on-write fork: the caller copied `donor` into a
+        freshly-`alloc`ed page device-side and remapped its block table;
+        here the donor sheds that writer's lease (it stays cached/shared,
+        read-only)."""
+        self.cow_forks += 1
+        self.free([donor])
+
+    # ------------------------------------------------------------------
+    # prefix cache
+    # ------------------------------------------------------------------
+
+    def _boundary_key(self, tier: str, prompt: list[int], i: int) -> tuple:
+        return (self.fingerprint, tier, tuple(prompt[:i * self.page_size]))
+
+    def _tail_key(self, tier: str, prompt: list[int]) -> tuple:
+        return (self.fingerprint, tier, tuple(prompt), "tail")
+
+    def prefix_lookup(self, prompt: list[int],
+                      tier: str) -> tuple[list[int], int, int | None]:
+        """Longest cached prefix of `prompt` under this tier's key space.
+
+        Returns `(whole_pages, shared_tokens, tail_donor)`: the cached
+        whole-page run (page ids in sequence order), the token count it
+        covers, and — on an exact full-prompt match — the cached partial
+        tail page to copy-on-write from (then `shared_tokens` is
+        `len(prompt) - 1`: the last prompt token is always re-run so the
+        admission has logits to sample the first generated token from).
+        """
+        if not self.prefix_caching:
+            return [], 0, None
+        plen = len(prompt)
+        psz = self.page_size
+        pages: list[int] = []
+        touched: list[tuple] = []
+        # cap the walk so >= 1 prompt token stays uncached (logits source)
+        for i in range(1, (plen - 1) // psz + 1):
+            key = self._boundary_key(tier, prompt, i)
+            page = self._index.get(key)
+            if page is None:
+                break
+            pages.append(page)
+            touched.append(key)
+        shared = len(pages) * psz
+        tail_donor = None
+        # a tail hit only pays when it extends sharing past the whole-page
+        # run (plen-1 > W*psz, i.e. >= 2 prompt tokens on the tail page) —
+        # otherwise the device copy buys nothing
+        if len(pages) == plen // psz and plen % psz >= 2:
+            key = self._tail_key(tier, prompt)
+            tail_donor = self._index.get(key)
+            if tail_donor is not None:
+                shared = plen - 1
+                touched.append(key)
+        for key in touched:                    # LRU touch per involved run
+            run = self._run_of_key.get(key)
+            if run is not None and run in self._runs:
+                self._runs.move_to_end(run)
+        return pages, shared, tail_donor
+
+    def prefix_register(self, prompt: list[int], pages: list[int],
+                        tier: str) -> int:
+        """Register a freshly-prefilled prompt's pages for reuse: one entry
+        per whole prompt page plus a tail entry for the partial last page.
+        Entries whose key already exists are skipped (first registrant
+        wins; identical arithmetic makes the pages bit-identical anyway).
+
+        The registrant keeps decoding into the tail page — that is safe:
+        its decode writes land at rows >= plen % psz, past the cached
+        prompt rows, and a future reader COW-copies the page then masks
+        whatever stale rows it didn't overwrite by position (the same
+        invariant normal paged decode relies on for recycled pages).
+        Returns the number of pages newly registered."""
+        if not self.prefix_caching:
+            return 0
+        plen = len(prompt)
+        psz = self.page_size
+        added: list[tuple] = []
+        run_id = (self.fingerprint, tier, tuple(prompt))
+        for i in range(1, plen // psz + 1):
+            key = self._boundary_key(tier, prompt, i)
+            if key in self._index:
+                continue
+            self._register_one(key, pages[i - 1], run_id, added)
+        # tail entries with < 2 prompt rows never beat the whole-page run
+        # (see prefix_lookup) — don't park a page in the cache for them
+        if plen % psz >= 2:
+            key = self._tail_key(tier, prompt)
+            if key not in self._index:
+                self._register_one(key, pages[plen // psz], run_id, added)
+        if added:
+            self._runs.setdefault(run_id, []).extend(added)
+            self._runs.move_to_end(run_id)
+        return len(added)
+
+    def _register_one(self, key: tuple, page: int, run_id: tuple,
+                      added: list[tuple]):
+        assert page not in self._page_key, (page, "already registered")
+        self._index[key] = page
+        self._page_key[page] = key
+        self._run_of_key[key] = run_id
+        added.append(key)
 
 
 @dataclasses.dataclass
@@ -125,10 +373,19 @@ class Request:
     # filled in by the scheduler as the request is served
     tokens: list[int] = dataclasses.field(default_factory=list)
     slot: int = -1
-    # KV pages allocated at admission (paged engines; freed on retirement,
-    # the list is kept as a record). None after admission = could never fit
-    # the pool / block table — the engine retires it as rejected.
+    # KV pages mapped at admission (paged engines; leases released on
+    # retirement, the list is kept as a record). None after admission =
+    # could never fit the pool / block table — the engine retires it as
+    # rejected. With prefix caching the first `shared_tokens // page_size`
+    # entries are cache-hit pages (retained, not allocated).
     pages: list[int] | None = None
+    # prompt tokens whose KV is served from the prefix cache (prefill
+    # resumes at this offset; 0 = full prefill)
+    shared_tokens: int = 0
+    # cached partial tail page to copy-on-write from before this request's
+    # first write (engine copies device-side into pages[shared_tokens //
+    # page_size] then reports the fork; cleared back to None once done)
+    cow_src: int | None = None
     t_admitted: float | None = None
     t_first_token: float | None = None   # TTFT reference point
     t_done: float | None = None
@@ -189,6 +446,8 @@ class SlotScheduler:
         # as ("bulk", "exact").
         self.tier_mode_tokens: dict[tuple[str, str], int] = {}
         self.tier_affine_picks = 0   # admissions that skipped the FIFO head
+        self.prefix_hits = 0         # admissions that mapped cached pages
+        self.prefix_tokens_saved = 0  # prompt tokens not re-prefilled
 
     # ------------------------------------------------------------------
     # submission / admission
@@ -257,7 +516,15 @@ class SlotScheduler:
             tokens = cand.prompt_len + cand.max_new_tokens
             fits = self.pages.fits_ever(tokens)
             needed = self.pages.pages_needed(tokens)
-            if fits and needed > self.pages.free_pages:
+            hit: list[int] = []
+            shared = 0
+            donor = None
+            if fits:
+                hit, shared, donor = self.pages.prefix_lookup(
+                    cand.prompt, cand.tier)
+            fresh = needed - len(hit)
+            pinned = set(hit) | ({donor} if donor is not None else set())
+            if fits and fresh > self.pages.allocatable(pinned):
                 # count *requests* that waited, not poll attempts — the
                 # loop re-asks every chunk tick while the head is blocked
                 if cand.rid not in self._blocked_rids:
@@ -269,7 +536,24 @@ class SlotScheduler:
         if i > 0:
             self.tier_affine_picks += 1
         if self.pages is not None:
-            req.pages = self.pages.alloc(needed) if fits else None
+            if not fits:
+                req.pages = None
+            else:
+                # transaction: pin the hit pages (+ COW donor) with leases
+                # FIRST so the fresh alloc's eviction pass cannot reclaim
+                # them, then allocate the remainder — the allocatable()
+                # gate above guarantees this succeeds
+                if pinned:
+                    self.pages.retain(hit + ([donor] if donor is not None
+                                             else []))
+                fresh_pages = self.pages.alloc(fresh)
+                assert fresh_pages is not None, (fresh, "gate lied")
+                req.pages = hit + fresh_pages
+                req.shared_tokens = shared
+                req.cow_src = donor
+                if shared:
+                    self.prefix_hits += 1
+                    self.prefix_tokens_saved += shared
         req.slot = slot_idx
         req.t_admitted = now
         if self._slot_used[slot_idx]:
@@ -353,6 +637,14 @@ class SlotScheduler:
         elif req.n_generated >= req.max_new_tokens:
             self._finish(slot, req, "length", now)
 
+    def cow_done(self, req: Request):
+        """The engine finished copying `req.cow_src` into the request's own
+        tail page: release the donor's copy-window lease (it stays cached
+        for the next reader) and count the fork."""
+        assert req.cow_src is not None
+        self.pages.cow_fork(req.cow_src)
+        req.cow_src = None
+
     def _finish(self, slot: _Slot, req: Request, reason: str, now: float):
         req.finish_reason = reason
         req.t_done = now
@@ -362,6 +654,11 @@ class SlotScheduler:
             # every retirement path — EOS, budget, rejection — returns the
             # request's pages; `req.pages` stays as the record of what ran
             self.pages.free(req.pages)
+            if req.cow_src is not None:
+                # retired before the engine ran the COW copy (e.g. engine
+                # rejection): drop the donor's copy-window lease too
+                self.pages.free([req.cow_src])
+                req.cow_src = None
         self._freed_slots.append(req.slot)
 
     def drain_freed(self) -> list[int]:
@@ -412,10 +709,22 @@ class SlotScheduler:
                 "page_size": self.pages.page_size,
                 "pages_total": self.pages.capacity,
                 "pages_peak_in_use": self.pages.peak_in_use,
-                "pages_leaked": self.pages.in_use,   # 0 once drained
+                # three-way split: leased (live block tables), cached
+                # (prefix index retains them, refcount 0 — NOT leaks),
+                # leaked (unaccounted — must be 0, drained or not)
+                "pages_leased": self.pages.leased,
+                "pages_cached": self.pages.cached,
+                "pages_leaked": self.pages.leaked,
                 "page_blocks": self.page_blocks,
                 "page_util_mean": round(float(
                     np.mean(self.page_util_samples)), 4)
                 if self.page_util_samples else 0.0,
             }
+            if self.pages.prefix_caching:
+                out |= {
+                    "prefix_hits": self.prefix_hits,
+                    "prefix_tokens_saved": self.prefix_tokens_saved,
+                    "cow_forks": self.pages.cow_forks,
+                    "prefix_evictions": self.pages.prefix_evictions,
+                }
         return out

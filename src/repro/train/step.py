@@ -75,13 +75,19 @@ def make_train_step(cfg: ArchConfig, opt: AdamW, accum_steps: int = 1,
     return train_step
 
 
-def make_prefill_step(cfg: ArchConfig):
-    """prefill(params, tokens, cache, [frontend]) → (logits_last, cache)."""
+def make_prefill_step(cfg: ArchConfig, prefix_len: int = 0):
+    """prefill(params, tokens, cache, [frontend]) → (logits_last, cache).
+
+    With `prefix_len > 0` (continued prefill — the serve engine's
+    prefix-cache hits), `tokens` holds only a prompt's uncached suffix and
+    the cache's first `prefix_len` rows are pre-loaded shared-prefix KV;
+    rope positions, the cache write offset, and the attention masks all
+    start at `prefix_len` (model.forward / layers.attention_block)."""
 
     def prefill(params, tokens, cache, frontend=None):
         logits, cache, _ = M.forward(params, cfg, tokens, cache=cache,
                                      frontend_embeds=frontend,
-                                     last_only=True)
+                                     last_only=True, prefix_len=prefix_len)
         return logits, cache
 
     return prefill

@@ -262,7 +262,10 @@ def test_oversized_request_rejected_paged(dense_setup):
 
 def test_page_accounting_never_leaks_across_refills(dense_setup):
     """Many requests churn through few slots on a tight pool; every page
-    must come back — the allocator ends exactly where it started."""
+    must be accounted for when the stream drains — either back on the free
+    list or parked in the prefix cache (refcount 0, retained for reuse).
+    Cached-but-unleased pages are NOT leaks: the three-way split
+    `pages_leased`/`pages_cached`/`pages_leaked` keeps the leak gate at 0."""
     cfg, params = dense_setup
     n_req = 8
     prompts = _prompts(cfg, [5 + (i % 4) for i in range(n_req)], seed=19)
@@ -277,8 +280,16 @@ def test_page_accounting_never_leaks_across_refills(dense_setup):
         summary = eng.serve(sched)
     pa = sched.pages
     assert summary["requests"] == n_req and summary["rejected"] == 0
-    assert pa.in_use == 0 and pa.free_pages == pa.capacity
-    assert sorted(pa._free) == list(range(1, 4))        # ids intact, no dupes
+    # drained: nothing leased, nothing leaked; any page still in use is
+    # exactly a prefix-cache retention
+    assert pa.leased == 0 and pa.leaked == 0
+    assert pa.in_use == pa.cached
+    assert summary["pages_leased"] == 0 and summary["pages_leaked"] == 0
+    assert summary["pages_cached"] == pa.cached
+    # free list and cache partition the pool: ids intact, no dupes
+    cached_ids = sorted(p for p in pa._page_key if pa._refcount[p] == 0)
+    assert sorted(list(pa._free) + cached_ids) == list(range(1, 4))
+    assert sorted(pa._free_set) == sorted(pa._free)     # lockstep mirror
     assert summary["slot_refills"] >= n_req - 2
     assert 0 < summary["pages_peak_in_use"] <= pa.capacity
     # every request recorded a real allocation and matched its reference
@@ -310,6 +321,189 @@ def test_page_allocator_pure():
         pa.free([0])                        # the trash page is never freed
     with pytest.raises(AssertionError):
         pa.free([1])                        # double free
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing + copy-on-write
+# ---------------------------------------------------------------------------
+
+def _serve_fleet(cfg, params, prompts, budgets, *, greedy=True,
+                 pool_pages=None, cache_len=32, page_size=8, batch=2,
+                 tiers=None):
+    eng = ServeEngine(cfg, params, batch=batch, cache_len=cache_len,
+                      eos_id=-1, sync_every=2, kv_layout="paged",
+                      page_size=page_size, pool_pages=pool_pages)
+    sched = SlotScheduler(batch, eos_id=-1)
+    for i, (p, n) in enumerate(zip(prompts, budgets)):
+        sched.submit(p, max_new_tokens=n,
+                     tier=tiers[i] if tiers else "premium")
+    summary = eng.serve(sched, greedy=greedy)
+    return sched, summary
+
+
+def test_prefix_shared_system_prompt_fleet(dense_setup, monkeypatch):
+    """A fleet sharing one 16-token system prompt prefills the shared span
+    once: later admissions map the cached pages (prefix_hits), save their
+    prefill tokens, and peak *leased* pages drop measurably — while every
+    token stays bit-identical to the sharing-disabled run AND the batch-1
+    references."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(29)
+    system = rng.integers(0, cfg.vocab_size, 16).tolist()
+    prompts = [system + rng.integers(0, cfg.vocab_size, 4).tolist()
+               for _ in range(6)]
+    budgets = [4] * 6
+    with use_policy(FP32):
+        monkeypatch.setenv("REPRO_PREFIX_CACHE", "1")
+        on, s_on = _serve_fleet(cfg, params, prompts, budgets)
+        monkeypatch.setenv("REPRO_PREFIX_CACHE", "0")
+        off, s_off = _serve_fleet(cfg, params, prompts, budgets)
+        refs = [_reference_decode(cfg, params, p, n, cache_len=32)
+                for p, n in zip(prompts, budgets)]
+    on_by = {r.rid: r for r in on.finished}
+    off_by = {r.rid: r for r in off.finished}
+    for rid, ref in enumerate(refs):
+        assert on_by[rid].tokens == off_by[rid].tokens == ref, rid
+    # first request registers; the other five hit the two whole pages
+    assert s_on["prefix_hits"] == 5
+    assert s_on["prefix_tokens_saved"] == 5 * 16
+    assert "prefix_hits" not in s_off
+    assert on_by[1].shared_tokens == 16 and off_by[1].shared_tokens == 0
+    # sharing shrinks the lease high-water mark (satellite: peak tracks
+    # every lease change, and cached retentions are not leases)
+    assert s_on["pages_peak_in_use"] < s_off["pages_peak_in_use"]
+    assert s_on["pages_leaked"] == 0 and s_off["pages_leaked"] == 0
+    assert s_on["pages_leased"] == 0
+    assert s_on["pages_cached"] > 0 and s_off["pages_cached"] == 0
+
+
+def test_prefix_cow_fork_under_sampling(dense_setup, monkeypatch):
+    """n>1 sampling of one prompt: every later admission tail-hits the
+    first's cached partial page, COW-copies it into its own page, then the
+    sampled continuations DIVERGE — each stream's decode writes land in its
+    private fork. The engine consumes rng in the same order with sharing on
+    and off, so the sampled streams must be token-identical: any COW
+    corruption (a reader scribbling on the shared tail) would break it."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(31)
+    prompt = rng.integers(0, cfg.vocab_size, 13).tolist()   # 1 page + tail 5
+    prompts, budgets = [prompt] * 4, [6] * 4
+    with use_policy(FP32):
+        monkeypatch.setenv("REPRO_PREFIX_CACHE", "1")
+        on, s_on = _serve_fleet(cfg, params, prompts, budgets, greedy=False)
+        monkeypatch.setenv("REPRO_PREFIX_CACHE", "0")
+        off, s_off = _serve_fleet(cfg, params, prompts, budgets, greedy=False)
+    on_by = {r.rid: r for r in on.finished}
+    off_by = {r.rid: r for r in off.finished}
+    for rid in range(4):
+        assert on_by[rid].tokens == off_by[rid].tokens, rid
+    # identical full prompts: reqs 1..3 share 12 of 13 tokens via the tail
+    # donor (the last prompt token always re-prefills for logits)
+    assert s_on["prefix_hits"] == 3 and s_on["cow_forks"] == 3
+    assert s_on["prefix_tokens_saved"] == 3 * 12
+    # sampling actually diverged the forks (else COW went untested)
+    assert len({tuple(on_by[r].tokens) for r in range(4)}) > 1
+
+
+def test_prefix_cache_eviction_churn_leak_free(dense_setup):
+    """Shared-prefix churn on a pool too small to cache every tail: idle
+    cached runs evict under pressure while pinned (hit) runs survive; after
+    the drain nothing is leased and nothing leaks, and every stream matched
+    its reference."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(37)
+    system = rng.integers(0, cfg.vocab_size, 8).tolist()
+    prompts = [system + rng.integers(0, cfg.vocab_size, 4).tolist()
+               for _ in range(8)]
+    budgets = [4] * 8
+    with use_policy(FP32):
+        sched, summary = _serve_fleet(cfg, params, prompts, budgets,
+                                      pool_pages=5, cache_len=16)
+        refs = [_reference_decode(cfg, params, p, n, cache_len=16)
+                for p, n in zip(prompts, budgets)]
+    pa = sched.pages
+    assert summary["requests"] == 8 and summary["rejected"] == 0
+    assert summary["prefix_hits"] >= 6          # the system page stays hot
+    assert summary["prefix_evictions"] > 0      # idle tails were reclaimed
+    assert pa.leased == 0 and pa.leaked == 0
+    assert summary["pages_leased"] == 0 and summary["pages_leaked"] == 0
+    assert sorted(pa._free_set) == sorted(pa._free)
+    by = {r.rid: r for r in sched.finished}
+    for rid, ref in enumerate(refs):
+        assert by[rid].tokens == ref, rid
+
+
+def test_prefix_cache_tier_isolation(dense_setup, monkeypatch):
+    """Premium and bulk streams never share a cached prefix: the cache key
+    carries the tier, so one identical prompt served under both tiers
+    registers two independent runs (2 hits among 4 requests, not 3) —
+    the divergence-probe premium-identity guarantee cannot be laundered
+    through a shared page."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(41)
+    prompt = rng.integers(0, cfg.vocab_size, 12).tolist()
+    prompts, budgets = [prompt] * 4, [4] * 4
+    tiers = ["premium", "bulk", "premium", "bulk"]
+    with use_policy(FP32):
+        monkeypatch.setenv("REPRO_PREFIX_CACHE", "1")
+        on, s_on = _serve_fleet(cfg, params, prompts, budgets, tiers=tiers)
+        monkeypatch.setenv("REPRO_PREFIX_CACHE", "0")
+        off, s_off = _serve_fleet(cfg, params, prompts, budgets, tiers=tiers)
+    assert s_on["prefix_hits"] == 2             # one per tier, never across
+    on_by = {r.rid: r for r in on.finished}
+    off_by = {r.rid: r for r in off.finished}
+    for rid in range(4):
+        assert on_by[rid].tokens == off_by[rid].tokens, rid
+        assert on_by[rid].tier == tiers[rid]
+    # hits paired within tier: each tier's second request shared the run
+    shared_tiers = sorted(on_by[r].tier for r in range(4)
+                          if on_by[r].shared_tokens)
+    assert shared_tiers == ["bulk", "premium"]
+
+
+def test_page_allocator_refcounts_and_prefix_index():
+    """Pure host-side allocator: retain/release refcounts, cached-page
+    parking, tier-keyed lookup, tail-donor semantics, LRU eviction of idle
+    runs, and the leased-page high-water mark updating on every lease
+    change (not just alloc)."""
+    pa = PageAllocator(8, page_size=4, prefix_caching=True, fingerprint="t")
+    prompt = list(range(10))                    # 2 whole pages + tail of 2
+    pages = pa.alloc(3)
+    assert pages == [1, 2, 3] and pa.leased == 3 and pa.peak_in_use == 3
+    assert pa.prefix_register(prompt, pages, "premium") == 3
+    # tier isolation + longest-run lookup with tail donor
+    assert pa.prefix_lookup(prompt, "bulk") == ([], 0, None)
+    hit, shared, donor = pa.prefix_lookup(prompt, "premium")
+    assert hit == [1, 2] and shared == 9 and donor == 3
+    # registrant retires: its pages park as cached, NOT freed or leaked
+    pa.free(pages)
+    assert pa.leased == 0 and pa.cached == 3 and pa.leaked == 0
+    assert pa.free_pages == 4 and pa.in_use == 3
+    # a reader pins the run with leases, allocs its remainder; the peak
+    # notes the retain-driven lease growth (satellite: every lease change)
+    pa.retain(hit + [donor])
+    assert pa.leased == 3 and pa.cached == 0
+    fresh = pa.alloc(1)
+    assert fresh == [4] and pa.leased == 4 and pa.peak_in_use == 4
+    pa.cow_fork(donor)                          # copy done: donor re-parks
+    assert pa.cow_forks == 1 and pa.cached == 1 and pa.leased == 3
+    pa.free(hit + fresh)
+    assert pa.leased == 0 and pa.cached == 3 and pa.leaked == 0
+    # a partially-pinned run never evicts; an idle one does (LRU)
+    pa.retain([1])
+    assert pa.allocatable({1}) == pa.free_pages == 4
+    pa.free([1])
+    assert pa.allocatable() == 7                # idle run is reclaimable
+    big = pa.alloc(6)                           # forces eviction of the run
+    assert big is not None and pa.prefix_evictions == 1
+    assert pa.prefix_lookup(prompt, "premium") == ([], 0, None)
+    pa.free(big)
+    assert pa.leaked == 0 and pa.free_pages == 7
+    # double free / retain-of-free still assert, now O(1) via the free-set
+    with pytest.raises(AssertionError):
+        pa.free([1])
+    with pytest.raises(AssertionError):
+        pa.retain([1])
 
 
 def test_gather_pages_masks_unmapped_and_wiped():

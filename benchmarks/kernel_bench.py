@@ -89,6 +89,7 @@ def rows(smoke: bool = False):
                 "us_per_call": round(us, 1)})
     out.extend(autotune_rows(smoke))
     out.extend(decode_rows(smoke))
+    out.extend(spec_verify_rows(smoke))
     out.extend(decode_attn_rows(smoke))
     out.extend(backend_rows(rng))
     return out
@@ -130,6 +131,20 @@ def decode_rows(smoke: bool = False):
     n, k = 512, 256
     ms = (1, 4) if smoke else (1, 4, 8)
     return [_tuned_row("decode", m, k, n, dtype) for m in ms]
+
+
+def spec_verify_rows(smoke: bool = False):
+    """Verify-block GEMMs (M = batch·(spec_k+1)): the self-speculative
+    decode verification regime (DESIGN.md §9).
+
+    Deliberately odd Ms — spec_k ∈ {1, 4, 8} at batch 1 gives M ∈ {2, 5, 9},
+    between the decode table's power-of-two rows, so `clip_blocks`' sublane
+    rounding is exercised off the tile grid. The engine pre-seeds these
+    shapes via `autotune.tune_spec_verify`."""
+    dtype = autotune.production_dtype()
+    n, k = 512, 256
+    ms = (2, 5) if smoke else (2, 5, 9)
+    return [_tuned_row("spec_verify", m, k, n, dtype) for m in ms]
 
 
 def _paged_workload(rng, batch, kvh, g, hd, psz, max_pages, mapped):

@@ -30,11 +30,17 @@ def get_config(name: str) -> ArchConfig:
         raise ValueError(f"unknown arch {name!r}; have {sorted(REGISTRY)}") from e
 
 
-def reduced_config(name: str, layers_per_period: int = 1) -> ArchConfig:
+def reduced_config(name: str, layers_per_period: int = 1,
+                   width: int = 1) -> ArchConfig:
     """Smoke-test variant: same family/structure, tiny dims.
 
     Keeps the structural pattern (attn_pattern, moe cadence, hybrid/enc-dec)
     but shrinks width/depth/experts/vocab so one CPU train step is cheap.
+    `width` scales d_model/d_ff (×width) past the dispatch-bound floor —
+    at width 1 every forward costs about the same wall time regardless of
+    depth, so experiments about *compute* ratios (e.g. the early-exit
+    draft's depth saving, DESIGN.md §9) need width ≥ ~4 to measure
+    anything but op-dispatch overhead.
     """
     full = get_config(name)
     period = full.stack_period
@@ -44,10 +50,10 @@ def reduced_config(name: str, layers_per_period: int = 1) -> ArchConfig:
     changes = dict(
         name=full.name + "-smoke",
         num_layers=period * layers_per_period,
-        d_model=64, head_dim=hd,
+        d_model=64 * width, head_dim=hd,
         num_heads=n_heads, num_kv_heads=n_kv,
-        d_ff=0 if full.family == "ssm" else 128,
-        d_ff_dense=128 if full.d_ff_dense else 0,
+        d_ff=0 if full.family == "ssm" else 128 * width,
+        d_ff_dense=128 * width if full.d_ff_dense else 0,
         vocab_size=503,  # odd on purpose: catches divisibility assumptions
         window=min(full.window, 8) if full.window else 0,
         ssm_state=16 if full.ssm_state else 0,

@@ -134,6 +134,33 @@ def prefix_cache_enabled() -> bool:
         "0", "false", "off")
 
 
+def spec_decode_enabled() -> bool:
+    """Self-speculative decoding kill-switch (reads REPRO_SPEC_DECODE at
+    call time, default on — same contract as `prefix_cache_enabled`).
+    The flag only *arms* the path: a serve engine actually drafts when its
+    `spec_k >= 1` (constructor arg or REPRO_SPEC_K / --spec-k), so default
+    environments never speculate. "0" is the A/B: under greedy decoding
+    the spec path is pinned token-identical to plain chunked decode
+    (tests/test_serve.py, CI serve-smoke), so the switch trades wall time
+    only, never tokens. Engines additionally auto-disable drafting where
+    rollback-by-position is unsound (ssm/hybrid recurrent state, single-
+    superblock stacks with nothing to early-exit from)."""
+    return os.environ.get("REPRO_SPEC_DECODE", "1") not in (
+        "0", "false", "off")
+
+
+def spec_k(default: int = 0) -> int:
+    """Default draft length for self-speculative decoding (reads
+    REPRO_SPEC_K at call time; 0 = off). Each serve iteration drafts
+    `spec_k` tokens with the early-exit forward and verifies them in one
+    batched M = spec_k+1 forward; `ServeEngine(spec_k=...)` and the
+    driver's --spec-k override this per engine."""
+    k = int(os.environ.get("REPRO_SPEC_K", default))
+    if k < 0:
+        raise ValueError(f"REPRO_SPEC_K={k}; want >= 0")
+    return k
+
+
 _SA_MODES = ("exact", "approx")
 
 

@@ -241,6 +241,19 @@ def tune_decode(n: int, k: int, ms: tuple[int, ...] = (1, 4, 8), *,
     return {m: tune(m, n, k, dtype=dtype, reps=reps)[0] for m in ms}
 
 
+def tune_spec_verify(n: int, k: int, batch: int, spec_k: int, *,
+                     dtype: str = "bfloat16", reps: int = 3
+                     ) -> dict[int, tuple[int, int, int]]:
+    """Pre-seed the speculative-decode GEMM shapes (DESIGN.md §9): the
+    draft/plain decode rows at M = batch and the batched verify forward at
+    M = batch·(spec_k+1) — the verify folds each slot's k+1 draft rows
+    into the batch axis, so its GEMMs run at that one M. Same startup
+    contract as `tune_decode` (lookup cannot sweep inside the jitted spec
+    chunk)."""
+    return tune_decode(n, k, ms=(batch, batch * (spec_k + 1)),
+                       dtype=dtype, reps=reps)
+
+
 def lookup(m: int, n: int, k: int, *, dtype: str = "bfloat16",
            epilogue: str = "none", sweep: bool | None = None
            ) -> tuple[int, int, int]:

@@ -71,8 +71,55 @@ def build_requests(sched: SlotScheduler, cfg, n: int, rate: float,
                      tier=tier)
 
 
+def spec_warmup_train(cfg, params, steps: int, seed: int):
+    """Seed-pure warm-up training for the speculative-decoding demo.
+
+    Random init weights are random rotations layer to layer — the early-
+    exit draft's argmax agrees with the full model's ~10% of the time, so
+    speculation can only lose. Real deployments speculate on *trained*
+    models; this stands in for that with a few hundred AdamW steps on an
+    order-1 Markov corpus (each token has a dominant successor drawn once
+    from `seed`, taken with p=0.9), which is learnable by the early layers
+    alone — exactly the regime where a shallow draft agrees with the full
+    stack. Pure function of (cfg, seed): the REPRO_SPEC_DECODE=1|0 A/B
+    trains identical weights on both sides.
+    """
+    import dataclasses
+
+    from repro.train.optimizer import AdamW, constant_lr
+    from repro.train.step import make_train_step
+    from repro.train.train_state import TrainState
+
+    rng = np.random.default_rng(seed + 11)
+    succ = rng.integers(0, cfg.vocab_size, size=cfg.vocab_size)
+
+    def markov_batch(bsz=8, T=32):
+        toks = np.empty((bsz, T + 1), np.int64)
+        toks[:, 0] = rng.integers(0, cfg.vocab_size, size=bsz)
+        for t in range(T):
+            toks[:, t + 1] = np.where(
+                rng.random(bsz) < 0.9, succ[toks[:, t]],
+                rng.integers(0, cfg.vocab_size, size=bsz))
+        return {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+                "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+
+    opt = AdamW(constant_lr(3e-3), weight_decay=0.0)
+    # remat trades compute for memory — pointless at warm-up scale
+    step = jax.jit(make_train_step(dataclasses.replace(cfg, remat=False),
+                                   opt))
+    state = TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                       opt_state=opt.init(params))
+    metrics = {}
+    for _ in range(steps):
+        state, metrics = step(state, markov_batch())
+    print(f"[spec-warmup] steps={steps} "
+          f"final_loss={float(metrics.get('loss', float('nan'))):.3f}")
+    return state.params
+
+
 def preseed_decode_blocks(cfg, batch: int, page_size: int | None = None,
-                          max_pages: int | None = None):
+                          max_pages: int | None = None,
+                          spec_k: int = 0):
     """Sweep decode-shape GEMV blocks before serving starts.
 
     The jitted decode step cannot sweep mid-trace (autotune.lookup falls
@@ -87,7 +134,12 @@ def preseed_decode_blocks(cfg, batch: int, page_size: int | None = None,
     When the engine serves the paged KV layout (`page_size`/`max_pages`
     given), also sweeps the fused decode-attention grid shapes
     (pages_per_block, heads_per_block) for the exact workload the chunk fn
-    will lower — same cannot-sweep-mid-trace constraint, same cache."""
+    will lower — same cannot-sweep-mid-trace constraint, same cache.
+
+    With `spec_k > 0`, also pre-seeds the speculative verify forward's
+    GEMM shapes at M = batch·(spec_k+1) (autotune.tune_spec_verify) — the
+    batched verify is the one decode-path GEMM that doesn't run at
+    M = batch."""
     from repro.kernels import autotune
 
     dtype = autotune.production_dtype()
@@ -98,7 +150,11 @@ def preseed_decode_blocks(cfg, batch: int, page_size: int | None = None,
     if ff:
         shapes |= {(ff, d), (d, ff)}
     for n, k in sorted(shapes):
-        autotune.tune_decode(n, k, ms=(batch,), dtype=dtype, reps=2)
+        if spec_k:
+            autotune.tune_spec_verify(n, k, batch, spec_k, dtype=dtype,
+                                      reps=2)
+        else:
+            autotune.tune_decode(n, k, ms=(batch,), dtype=dtype, reps=2)
     if page_size and max_pages:
         kvh = cfg.num_kv_heads
         autotune.tune_decode_attn(batch, kvh, cfg.num_heads // kvh, hd,
@@ -113,17 +169,45 @@ def serve_continuous(args, cfg, params, plens) -> dict:
         max_pages = -(-seq // args.page_size) if paged else None
         preseed_decode_blocks(cfg, args.batch,
                               page_size=args.page_size if paged else None,
-                              max_pages=max_pages)
+                              max_pages=max_pages, spec_k=args.spec_k)
     engine = ServeEngine(cfg, params, args.batch, args.cache_len,
                          eos_id=args.eos_id, sync_every=args.sync_every,
                          kv_layout=args.kv, page_size=args.page_size,
                          pool_pages=args.pool_pages,
-                         max_seq_len=args.max_seq_len)
+                         max_seq_len=args.max_seq_len, spec_k=args.spec_k,
+                         spec_draft_layers=args.spec_draft_layers or None)
     sched = SlotScheduler(args.batch, eos_id=args.eos_id)
     build_requests(sched, cfg, args.requests, args.rate, plens,
                    args.max_new, args.seed, tier_mix=args.tier_mix,
                    prefix_mix=args.prefix_mix, prefix_len=args.prefix_len)
     summary = engine.serve(sched, greedy=True)
+    # digest of the full rid-ordered token streams: the spec-decode CI leg
+    # pins REPRO_SPEC_DECODE=1|0 byte-identical through this one field
+    # without dumping every token into the summary line
+    import hashlib
+    streams = ",".join(
+        f"{r.rid}:{'-'.join(map(str, r.tokens))}"
+        for r in sorted(sched.finished, key=lambda r: r.rid))
+    summary["stream_digest"] = hashlib.sha1(streams.encode()).hexdigest()[:16]
+    if engine.spec_decoding_on() and summary.get("spec_iters"):
+        # honest accounting: decode_tok_s above already counts only
+        # accepted tokens (rejected drafts never reach a Request); the
+        # draft/verify split is measured standalone at serving shapes
+        # (spec_timing_probe — the two phases share one jitted scan in
+        # serve(), so they cannot be timed in situ) and scaled by the
+        # iteration count actually run
+        split = engine.spec_timing_probe()
+        iters = summary["spec_iters"]
+        summary["spec_draft_s"] = round(split["draft_s"] * iters, 4)
+        summary["spec_verify_s"] = round(split["verify_s"] * iters, 4)
+        print(f"[spec] k={engine.spec_k} "
+              f"draft_layers={engine.spec_draft_layers}/"
+              f"{cfg.num_layers // cfg.stack_period} "
+              f"accept_rate={summary.get('spec_accept_rate', 0.0)} "
+              f"accepted={summary.get('spec_accepted', 0)}/"
+              f"drafted={summary.get('spec_drafted', 0)} "
+              f"draft_s~{summary['spec_draft_s']} "
+              f"verify_s~{summary['spec_verify_s']}")
     for r in sorted(sched.finished, key=lambda r: r.rid):
         # rejected requests never started: no TTFT / rate to report
         ttft = float("nan") if r.ttft is None else r.ttft
@@ -229,6 +313,29 @@ def main(argv=None):
                     help="fraction of requests submitted as the 'bulk' "
                          "quality tier (approximate-normalization decode "
                          "when a whole chunk is bulk); 0 = all premium")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="self-speculative draft length (0 = off): draft "
+                         "spec-k tokens per slot with the early-exit "
+                         "forward, verify them in one batched M=spec-k+1 "
+                         "forward, keep the longest agreeing prefix "
+                         "(DESIGN.md §9). Greedy output is token-identical "
+                         "to spec-k 0; REPRO_SPEC_DECODE=0 kill-switches")
+    ap.add_argument("--spec-draft-layers", type=int, default=0,
+                    help="superblocks the draft forward runs "
+                         "(0 = half the stack)")
+    ap.add_argument("--spec-warmup", type=int, default=0,
+                    help="seed-pure AdamW warm-up steps on a synthetic "
+                         "Markov corpus before serving — stands in for "
+                         "trained weights so the draft's acceptance rate "
+                         "is meaningful (random init accepts ~10%)")
+    ap.add_argument("--layers-per-period", type=int, default=1,
+                    help="depth multiplier for --reduced configs (the "
+                         "early-exit draft needs >= 2 superblocks)")
+    ap.add_argument("--width", type=int, default=1,
+                    help="width multiplier for --reduced configs "
+                         "(d_model/d_ff × width) — width >= 4 leaves the "
+                         "dispatch-bound floor so depth-proportional "
+                         "speedups (--spec-k) are measurable")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="EOS token id (-1: never fires on synthetic vocab)")
     ap.add_argument("--autotune-decode", action="store_true",
@@ -237,8 +344,13 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    cfg = (reduced_config(args.arch,
+                          layers_per_period=args.layers_per_period,
+                          width=args.width)
+           if args.reduced else get_config(args.arch))
     params = M.init_params(jax.random.key(args.seed), cfg)
+    if args.spec_warmup > 0:
+        params = spec_warmup_train(cfg, params, args.spec_warmup, args.seed)
     plens = [int(x) for x in args.prompt_lens.split(",")]
     # prefix-mix prompts grow by the shared system prompt; size the default
     # per-request capacity to still fit them

@@ -420,7 +420,8 @@ def _pad_heads(q, k, v, kvh_target: int):
 
 def attention_block(x, p, cfg, meta, positions, cache: KVCache | None = None,
                     pos=None, rope: bool = True, causal: bool = True,
-                    kv_override=None, prefix_len: int = 0):
+                    kv_override=None, prefix_len: int = 0,
+                    decode_multi: bool = False):
     """Full attention sub-layer. Returns (out, new_cache).
 
     meta: layer descriptor {"attn": "global"|"local"}. If `cache` is given and
@@ -431,6 +432,10 @@ def attention_block(x, p, cfg, meta, positions, cache: KVCache | None = None,
     serve engine's prefix-cache hits load them from shared pool pages — and
     x carries only the uncached suffix, whose KV is written at offset
     `prefix_len` and whose queries attend over [prefix ‖ suffix].
+    `decode_multi` (static) treats the T tokens of x as T *consecutive
+    decode steps* per slot (speculative verify, DESIGN.md §9) rather than a
+    prefill fragment: row t writes KV at position pos+t and attends like a
+    single-token decode at that position.
     """
     from repro.parallel import sharding as S_
     window = cfg.window if meta.get("attn") == "local" else 0
@@ -464,7 +469,63 @@ def attention_block(x, p, cfg, meta, positions, cache: KVCache | None = None,
         k = S_.constrain(k, "batch", None, "model", None)
         v = S_.constrain(v, "batch", None, "model", None)
     new_cache = None
-    if (cache is not None and x.shape[1] == 1
+    if cache is not None and decode_multi:
+        # multi-token decode (speculative verify): row t of the T-token
+        # block is the decode step for position pos+t — it writes KV at
+        # its own position, then the T query rows are folded into the
+        # batch axis so every row runs the *single-token* decode
+        # arithmetic (same reduction shapes, same kernel dispatch, with
+        # kv_positions <= pos+t standing in for the causal mask). XLA's
+        # row arithmetic is batch-fold stable, so under greedy decoding
+        # row t is bit-identical to the sequential decode step it
+        # replaces — that is the whole exactness argument for acceptance.
+        B, T = x.shape[0], x.shape[1]
+        H, hd = q.shape[2], q.shape[3]
+        tpos = positions.astype(jnp.int32)              # (B, T) = pos + t
+        qf = q.reshape(B * T, 1, H, hd)
+        posf = tpos.reshape(B * T)
+        from repro.core import optflags
+        from repro.core.precision import current_policy
+        from repro.kernels import ops as K
+        if isinstance(cache, PagedKVCache):
+            psz = cache.k.shape[1]
+            P = cache.block_table.shape[1]
+            page_i = tpos // psz                        # (B, T)
+            off = tpos % psz
+            b = jnp.arange(B)[:, None]
+            pid = cache.block_table[b, jnp.clip(page_i, 0, P - 1)]
+            pid = jnp.where((page_i < P) & (pid >= 0), pid, 0)
+            k_c = cache.k.at[pid, off].set(k.astype(cache.k.dtype))
+            v_c = cache.v.at[pid, off].set(v.astype(cache.v.dtype))
+            pos_c = cache.positions.at[pid, off].set(tpos)
+            new_cache = PagedKVCache(k_c, v_c, pos_c, cache.block_table)
+            impl = optflags.decode_attn_impl()
+            if impl == "fused" and K.fused_decode_supported(current_policy()):
+                btf = jnp.repeat(new_cache.block_table, T, axis=0)
+                o = K.paged_decode_attention(
+                    qf, new_cache.k, new_cache.v, new_cache.positions,
+                    btf, posf, window=window, cap=cfg.attn_softcap)
+            else:
+                k_g, v_g, pos_g = gather_pages(new_cache)
+                o = decode_attention(
+                    qf, jnp.repeat(k_g, T, axis=0),
+                    jnp.repeat(v_g, T, axis=0),
+                    jnp.repeat(pos_g, T, axis=0), posf, window=window,
+                    cap=cfg.attn_softcap)
+        else:
+            S = cache.k.shape[1]
+            slot = tpos % S                             # (B, T)
+            b = jnp.arange(B)[:, None]
+            k_c = cache.k.at[b, slot].set(k.astype(cache.k.dtype))
+            v_c = cache.v.at[b, slot].set(v.astype(cache.v.dtype))
+            pos_c = cache.positions.at[b, slot].set(tpos)
+            new_cache = KVCache(k_c, v_c, pos_c)
+            o = decode_attention(
+                qf, jnp.repeat(k_c, T, axis=0), jnp.repeat(v_c, T, axis=0),
+                jnp.repeat(pos_c, T, axis=0), posf, window=window,
+                cap=cfg.attn_softcap)
+        o = o.reshape(B, T, H, hd)
+    elif (cache is not None and x.shape[1] == 1
             and isinstance(cache, PagedKVCache)):
         # paged write: position p of slot b lives at offset p % page_size of
         # page block_table[b, p // page_size]. Rows whose position falls

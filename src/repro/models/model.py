@@ -245,7 +245,7 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int,
 # ---------------------------------------------------------------------------
 
 def _sublayer(x, p, cfg, meta, positions, cache, pos, encoder_out,
-              prefix_len: int = 0):
+              prefix_len: int = 0, decode_multi: bool = False):
     """One transformer layer. Returns (x, new_cache)."""
     new_cache: dict[str, Any] = {}
     h = L.norm_apply(x, p["norm1"], cfg.norm, cfg.norm_eps)
@@ -260,7 +260,8 @@ def _sublayer(x, p, cfg, meta, positions, cache, pos, encoder_out,
     if cfg.hybrid:
         a, kv = L.attention_block(h, p["attn"], cfg, meta, positions,
                                   cache=cache.get("kv") if cache else None,
-                                  pos=pos, prefix_len=prefix_len)
+                                  pos=pos, prefix_len=prefix_len,
+                                  decode_multi=decode_multi)
         ssm_cache = cache.get("ssm") if cache else None
         s, st = mamba2_block(h, p["ssm"], cfg,
                              state=ssm_cache[0] if ssm_cache else None,
@@ -272,7 +273,8 @@ def _sublayer(x, p, cfg, meta, positions, cache, pos, encoder_out,
     else:
         mix, kv = L.attention_block(h, p["attn"], cfg, meta, positions,
                                     cache=cache.get("kv") if cache else None,
-                                    pos=pos, prefix_len=prefix_len)
+                                    pos=pos, prefix_len=prefix_len,
+                                    decode_multi=decode_multi)
         if cache is not None:
             new_cache["kv"] = kv
     x = x + mix.astype(x.dtype)
@@ -341,7 +343,7 @@ def encode(params, cfg: ArchConfig, frontend_embeds):
 
 def forward(params, cfg: ArchConfig, tokens, *, positions=None, cache=None,
             pos=None, frontend_embeds=None, last_only: bool = False,
-            prefix_len: int = 0):
+            prefix_len: int = 0, decode_multi: bool = False):
     """Token ids (B, T) → logits. Returns (logits, new_cache, aux).
 
     `cache`/`pos` engage the decode path; `pos` is a (B,) int32 vector of
@@ -352,8 +354,18 @@ def forward(params, cfg: ArchConfig, tokens, *, positions=None, cache=None,
     (static) is the continued-prefill offset: `tokens` holds only a
     prompt's uncached suffix and the dense cache's first `prefix_len` rows
     hold pre-loaded KV (serve prefix-cache hits; see layers.attention_block).
+    `decode_multi` (static) marks the T tokens as T consecutive *decode*
+    steps per slot (speculative verify, DESIGN.md §9) instead of a prefill
+    fragment — row t writes and attends at position pos+t.
     """
     B, T = tokens.shape
+    if decode_multi and (cfg.family == "ssm" or cfg.hybrid):
+        # a rejected draft would leave the recurrent state advanced past
+        # the rollback point; attention caches roll back by position,
+        # ssm states cannot — the serve engine gates spec decoding off
+        # for these families (ServeEngine.spec_decoding_on)
+        raise ValueError("decode_multi needs rollback-by-position; "
+                         "ssm/hybrid recurrent state cannot roll back")
     compute_dtype = jnp.bfloat16
     x = jnp.take(params["embed"], tokens, axis=0).astype(compute_dtype)
     x = S_.constrain(x, "batch", None, None)
@@ -398,7 +410,7 @@ def forward(params, cfg: ArchConfig, tokens, *, positions=None, cache=None,
             c_j = None if cache_sb is None else cache_sb[j]
             x, extra = _sublayer(x, p_sb[j], cfg, cfg.layer_kind(j),
                                  positions, c_j, pos, encoder_out,
-                                 prefix_len)
+                                 prefix_len, decode_multi)
             if cache_sb is not None:
                 new_caches.append(extra)
             elif isinstance(extra, dict):   # moe aux losses

@@ -48,7 +48,8 @@ from repro.kernels.ops import fused_decode_supported
 from repro.models.config import ArchConfig
 from repro.models import model as M
 from repro.models.layers import KVCache, PagedKVCache
-from repro.train.step import make_prefill_step, make_serve_step
+from repro.train.step import (make_draft_step, make_prefill_step,
+                              make_serve_step, make_verify_step)
 from .scheduler import PageAllocator, SlotScheduler
 
 
@@ -61,7 +62,8 @@ class ServeEngine:
                  cache_len: int, eos_id: int = 2, cache_dtype=jnp.float32,
                  sync_every: int = 8, kv_layout: str | None = None,
                  page_size: int = 16, pool_pages: int | None = None,
-                 max_seq_len: int | None = None):
+                 max_seq_len: int | None = None, spec_k: int | None = None,
+                 spec_draft_layers: int | None = None):
         """`cache_len` is the per-request capacity of the ring layout and
         the pool-sizing reference of the paged one: by default the pool
         holds the same `batch · cache_len` tokens (plus the trash page) a
@@ -69,7 +71,13 @@ class ServeEngine:
         `cache_len`, rounded up to a page) caps a single request and
         `pool_pages` overrides total pool size — so a paged engine can
         admit one long request beyond `cache_len` without paying dense
-        rings of that length in every slot."""
+        rings of that length in every slot.
+
+        `spec_k` (default: REPRO_SPEC_K, 0 = off) is the self-speculative
+        draft length (DESIGN.md §9): each serve iteration drafts spec_k
+        tokens with an early-exit forward over the first
+        `spec_draft_layers` superblocks (default: half the stack) and
+        verifies them in one batched M = spec_k+1 forward."""
         self.cfg = cfg
         self.params = params
         self.batch = batch
@@ -107,7 +115,18 @@ class ServeEngine:
         # page-quantized, so the population stays small
         self._prefills: dict[int, Any] = {0: self._prefill}
         self._serve_step = make_serve_step(cfg)
-        self._chunks: dict[tuple[int, bool, str], Any] = {}
+        self.spec_k = (optflags.spec_k() if spec_k is None
+                       else max(0, int(spec_k)))
+        n_super = cfg.num_layers // cfg.stack_period
+        self.spec_draft_layers = (
+            min(max(1, int(spec_draft_layers)), n_super)
+            if spec_draft_layers else max(1, n_super // 2))
+        # jit-key closure cache for decode chunks. spec_k is part of the
+        # key (0 = the plain chunk): the spec chunk is a different traced
+        # program over the same (steps, greedy, mode) tuple, and a shared
+        # entry would silently serve whichever variant traced first — the
+        # same aliasing the divergence probe hit with shared mode traces.
+        self._chunks: dict[tuple[int, bool, str, int], Any] = {}
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
         self._clear_slot = jax.jit(self._clear_slot_impl, donate_argnums=(0,))
         self._load_prefix = jax.jit(self._load_prefix_impl,
@@ -141,6 +160,25 @@ class ServeEngine:
                 and self.kv_layout == "paged"
                 and self._frag_floor == 1
                 and self.cfg.family != "ssm" and not self.cfg.hybrid)
+
+    def spec_decoding_on(self) -> bool:
+        """Self-speculative decoding is armed (spec_k >= 1 and the
+        REPRO_SPEC_DECODE kill-switch is up) *and* sound for this engine:
+        rollback is a per-slot position non-advance, which only attention
+        caches support — ssm/hybrid recurrent state advances on every
+        forward and cannot un-see a rejected draft. A single-superblock
+        stack has no depth to early-exit from (the draft would BE the
+        model), and dense ring leaves (local windows; the ring layout)
+        need spec_k+1 distinct ring slots or the verify block's writes
+        would collide."""
+        n_super = self.cfg.num_layers // self.cfg.stack_period
+        min_ring = (self._frag_floor if self._frag_floor > 1
+                    else (self.cache_len if self.kv_layout == "ring"
+                          else None))
+        return (optflags.spec_decode_enabled() and self.spec_k >= 1
+                and n_super >= 2
+                and self.cfg.family != "ssm" and not self.cfg.hybrid
+                and (min_ring is None or self.spec_k + 1 <= min_ring))
 
     def _fingerprint(self) -> str:
         """Cache-key component isolating engines whose pages would not be
@@ -305,7 +343,7 @@ class ServeEngine:
         time, so mode is part of the jit-cache key and each variant is
         traced under its own `use_policy` scope — a shared traced callable
         would silently keep the mode it first saw."""
-        key = (steps, greedy, mode)
+        key = (steps, greedy, mode, 0)   # 0: the non-speculative chunk
         if key not in self._chunks:
             serve_step = self._serve_step
 
@@ -335,6 +373,127 @@ class ServeEngine:
 
             self._chunks[key] = run
         return self._chunks[key]
+
+    def _spec_chunk_fn(self, iters: int, greedy: bool, mode: str, k: int):
+        """`iters` draft-then-verify iterations in one device-side scan
+        (DESIGN.md §9). Each iteration drafts k tokens with the early-exit
+        step, scores them with one batched M=k+1 verify forward, and
+        advances every slot by its accepted-prefix length + 1:
+
+        * verify column t's target (argmax, or the sampled token) is the
+          token the plain decode path would emit at position pos+t, so the
+          longest prefix where draft == target is exactly correct output;
+        * column `acc` rides free — its context is fully verified even
+          when the draft at that column missed — so a reject-all
+          iteration still emits one normal token;
+        * rollback is the position non-advance itself: stale verify
+          writes past the new position stay masked (kv_positions <= pos)
+          and are overwritten in place by the next iteration's writes
+          (positions only re-cover ground, never skip it).
+
+        Returns (tok, cache, pos, rng, toks (iters, B, k+1),
+        accs (iters, B)); the scheduler's `observe_spec` keeps
+        toks[i, b, :accs[i, b] + 1] per iteration.
+        """
+        key = (iters, greedy, mode, k)
+        if key not in self._chunks:
+            draft_step = make_draft_step(self.cfg, self.spec_draft_layers)
+            verify_step = make_verify_step(self.cfg)
+
+            def chunk(params, tok, cache, pos, frontend, rng):
+                del frontend             # serve() is text-only
+
+                def body(carry, _):
+                    tok, cache, pos, rng = carry
+
+                    def draft_body(c, _):
+                        dtok, dcache, dpos = c
+                        dlogits, dcache = draft_step(params, dtok[:, None],
+                                                     dcache, dpos)
+                        nxt = jnp.argmax(dlogits[:, -1],
+                                         -1).astype(jnp.int32)
+                        return (nxt, dcache, dpos + 1), nxt
+
+                    # the draft threads the shared cache: step i attends
+                    # over step i-1's early-layer keys; the verify below
+                    # rewrites every row the draft wrote (all layers ⊇
+                    # early layers, pos..pos+k ⊇ pos..pos+k-1), so
+                    # rejected drafts leave no live state
+                    (_, cache, _), drafts = lax.scan(
+                        draft_body, (tok, cache, pos), length=k)
+                    drafts = drafts.T                         # (B, k)
+                    block = jnp.concatenate([tok[:, None], drafts], axis=1)
+                    logits, cache = verify_step(params, block, cache, pos)
+                    if greedy:
+                        out = jnp.argmax(logits, -1).astype(jnp.int32)
+                    else:
+                        rng, s = jax.random.split(rng)
+                        out = jax.random.categorical(
+                            s, logits).astype(jnp.int32)      # (B, k+1)
+                    match = (drafts == out[:, :-1]).astype(jnp.int32)
+                    acc = jnp.cumprod(match, axis=1).sum(axis=1)   # (B,)
+                    tok = jnp.take_along_axis(out, acc[:, None],
+                                              axis=1)[:, 0]
+                    return (tok, cache, pos + acc + 1, rng), (out, acc)
+
+                (tok, cache, pos, rng), (toks, accs) = lax.scan(
+                    body, (tok, cache, pos, rng), length=iters)
+                return tok, cache, pos, rng, toks, accs
+
+            jitted = jax.jit(chunk, donate_argnums=(2,))
+
+            def run(*args, _jitted=jitted, _mode=mode):
+                pol = dataclasses.replace(current_policy(), mode=_mode)
+                with use_policy(pol):
+                    return _jitted(*args)
+
+            self._chunks[key] = run
+        return self._chunks[key]
+
+    def spec_timing_probe(self, reps: int = 3) -> dict:
+        """Per-iteration draft/verify wall split at this engine's serving
+        shapes. serve() cannot time the two phases individually — they
+        live inside one jitted scan, and a host sync between them would
+        serialize the dispatch queue — so the driver's honest accounting
+        (launch/serve.py) runs the same two device programs standalone on
+        a fresh cache (identical shapes and tracing; an empty pool only
+        changes data, not the op graph) and scales the measured costs by
+        the spec iteration count. Returns {"draft_s", "verify_s"} per
+        iteration."""
+        k = self.spec_k
+        draft_step = make_draft_step(self.cfg, self.spec_draft_layers)
+        verify_step = make_verify_step(self.cfg)
+
+        def draft_scan(params, tok, cache, pos):
+            def body(c, _):
+                dtok, dcache, dpos = c
+                dlogits, dcache = draft_step(params, dtok[:, None], dcache,
+                                             dpos)
+                nxt = jnp.argmax(dlogits[:, -1], -1).astype(jnp.int32)
+                return (nxt, dcache, dpos + 1), ()
+
+            (tok, cache, _), _ = lax.scan(body, (tok, cache, pos), length=k)
+            return tok, cache
+
+        cache = (self.new_pool() if self.kv_layout == "paged"
+                 else self.new_cache())
+        tok = jnp.zeros((self.batch,), jnp.int32)
+        pos = jnp.zeros((self.batch,), jnp.int32)
+        block = jnp.zeros((self.batch, k + 1), jnp.int32)
+        out = {}
+        for name, fn, args in (
+                ("draft_s", jax.jit(draft_scan),
+                 (self.params, tok, cache, pos)),
+                ("verify_s", jax.jit(verify_step),
+                 (self.params, block, cache, pos))):
+            jax.block_until_ready(fn(*args))     # compile + warm
+            t = time.monotonic()
+            r = None
+            for _ in range(reps):
+                r = fn(*args)
+            jax.block_until_ready(r)
+            out[name] = (time.monotonic() - t) / reps
+        return out
 
     # ------------------------------------------------------------------
     # quality-tier instrumentation
@@ -499,6 +658,30 @@ class ServeEngine:
         pos = jnp.zeros((B,), jnp.int32)
         prefill_s = decode_s = 0.0
         chunk_modes = {"exact": 0, "approx": 0}
+        spec = self.spec_decoding_on()
+        # a spec iteration emits 1..spec_k+1 tokens; size the chunk so its
+        # *emission capacity* matches the plain chunk's sync_every tokens,
+        # keeping admission latency (scheduler ticks happen at chunk
+        # boundaries) comparable between the two paths
+        spec_iters = (max(1, -(-self.sync_every // (self.spec_k + 1)))
+                      if spec else 0)
+        spec_chunks = 0
+
+        # pre-compile the decode chunk before the timed loop: the first
+        # call otherwise charges multi-second XLA compilation to decode_s
+        # and drowns the steady-state rate the summary reports (the spec
+        # chunk's draft-scan + verify graph compiles several times longer
+        # than the plain chunk — exactly the A/B the accounting must not
+        # skew). Safe on the fresh cache: block tables are unmapped (paged
+        # writes fall to the trash page) and admission overwrites a ring/
+        # ssm slot row wholesale; tok/pos/rng results are discarded, so
+        # the token stream is byte-identical with or without the warmup.
+        t_c = clock()
+        warm = (self._spec_chunk_fn(spec_iters, greedy, "exact", self.spec_k)
+                if spec else self._chunk_fn(self.sync_every, greedy))
+        cache = warm(self.params, tok, cache, pos, None, rng)[1]
+        jax.block_until_ready(cache)
+        compile_s = clock() - t_c
 
         def clear_freed():
             # retirement freed the slot's pages; unmap its block-table rows
@@ -610,12 +793,22 @@ class ServeEngine:
             mode = "approx" if active_tiers == {"bulk"} else "exact"
             chunk_modes[mode] += 1
             t_d = now()
-            tok, cache, pos, rng, toks = self._chunk_fn(
-                self.sync_every, greedy, mode)(self.params, tok, cache, pos,
-                                               None, rng)
-            toks_np = np.asarray(toks)       # the chunk's single host sync
-            decode_s += now() - t_d
-            scheduler.observe(toks_np, now(), mode=mode)
+            if spec:
+                tok, cache, pos, rng, toks, accs = self._spec_chunk_fn(
+                    spec_iters, greedy, mode, self.spec_k)(
+                    self.params, tok, cache, pos, None, rng)
+                toks_np = np.asarray(toks)   # the chunk's single host sync
+                accs_np = np.asarray(accs)
+                decode_s += now() - t_d
+                spec_chunks += 1
+                scheduler.observe_spec(toks_np, accs_np, now(), mode=mode)
+            else:
+                tok, cache, pos, rng, toks = self._chunk_fn(
+                    self.sync_every, greedy, mode)(self.params, tok, cache,
+                                                   pos, None, rng)
+                toks_np = np.asarray(toks)   # the chunk's single host sync
+                decode_s += now() - t_d
+                scheduler.observe(toks_np, now(), mode=mode)
 
         summary = scheduler.summary()
         if chunk_modes["approx"]:
@@ -623,7 +816,12 @@ class ServeEngine:
                         "chunks_approx": chunk_modes["approx"]}
         summary |= {"prefill_s": round(prefill_s, 4),
                     "decode_s": round(decode_s, 4),
+                    "compile_s": round(compile_s, 4),
                     "wall_s": round(now(), 4)}
+        if spec_chunks:
+            summary |= {"spec_k": self.spec_k,
+                        "spec_draft_layers": self.spec_draft_layers,
+                        "spec_iters": spec_chunks * spec_iters}
         if paged:
             # which decode-attention path actually lowered into the chunk fn
             # (the knob is read at trace time; FP8 / non-fp32-out policies

@@ -448,6 +448,15 @@ class SlotScheduler:
         self.tier_affine_picks = 0   # admissions that skipped the FIFO head
         self.prefix_hits = 0         # admissions that mapped cached pages
         self.prefix_tokens_saved = 0  # prompt tokens not re-prefilled
+        # speculative-decode accounting (engine.observe_spec): drafted
+        # counts every draft token a live slot's iteration proposed,
+        # accepted the ones the verify forward agreed with — the ratio is
+        # the acceptance rate the draft-cost tradeoff lives or dies on
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        # histogram of per-iteration accepted-prefix lengths (0 = reject-
+        # all, k = the whole draft); live slots only
+        self.spec_accept_hist: dict[int, int] = {}
 
     # ------------------------------------------------------------------
     # submission / admission
@@ -627,6 +636,39 @@ class SlotScheduler:
             self.page_util_samples.append(
                 self.pages.in_use / self.pages.capacity)
 
+    def observe_spec(self, chunk_tokens: np.ndarray, accepted: np.ndarray,
+                     now: float, mode: str = "exact"):
+        """Consume one speculative decode chunk (engine._spec_chunk_fn):
+        `chunk_tokens` (iters, B, k+1) verify-target tokens, `accepted`
+        (iters, B) accepted-prefix lengths. Iteration s of slot i emitted
+        `chunk_tokens[s, i, :accepted[s, i] + 1]` — the accepted draft
+        prefix plus the free verify token; the rejected tail is rolled
+        back on device (position non-advance) and discarded here. EOS or
+        budget exhaustion inside an iteration retires the request between
+        tokens, so post-EOS emissions are dropped exactly like post-finish
+        steps in plain `observe`.
+        """
+        iters, B, k1 = chunk_tokens.shape
+        assert B == self.n_slots, (B, self.n_slots)
+        for s in range(iters):
+            for i, slot in enumerate(self.slots):
+                if slot.req is None:
+                    continue
+                a = int(accepted[s, i])
+                self.spec_drafted += k1 - 1
+                self.spec_accepted += a
+                self.spec_accept_hist[a] = (
+                    self.spec_accept_hist.get(a, 0) + 1)
+                for t in range(a + 1):
+                    if slot.req is None:     # finished mid-iteration
+                        break
+                    self._accept(slot, slot.req, int(chunk_tokens[s, i, t]),
+                                 now, mode=mode)
+        self.depth_samples.append(len(self.pending))
+        if self.pages is not None and self.pages.capacity:
+            self.page_util_samples.append(
+                self.pages.in_use / self.pages.capacity)
+
     def _accept(self, slot: _Slot, req: Request, token: int, now: float,
                 mode: str = "exact"):
         req.tokens.append(token)
@@ -704,6 +746,13 @@ class SlotScheduler:
                 f"{t}/{m}": n
                 for (t, m), n in sorted(self.tier_mode_tokens.items())}
             out["tier_affine_picks"] = self.tier_affine_picks
+        if self.spec_drafted:
+            out |= {
+                "spec_drafted": self.spec_drafted,
+                "spec_accepted": self.spec_accepted,
+                "spec_accept_rate": round(
+                    self.spec_accepted / self.spec_drafted, 4),
+            }
         if self.pages is not None:
             out |= {
                 "page_size": self.pages.page_size,

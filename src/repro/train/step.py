@@ -107,3 +107,44 @@ def make_serve_step(cfg: ArchConfig):
         return logits, cache
 
     return serve_step
+
+
+def make_draft_step(cfg: ArchConfig, draft_layers: int):
+    """Early-exit decode step for self-speculative drafting (DESIGN.md §9):
+    run only the first `draft_layers` superblocks of the *same* params —
+    no second model — then the shared final norm + lm_head.
+
+    (params, token (B,1), cache, pos (B,)) → (logits (B,1,V), new_cache).
+    The returned cache merges the draft's early-superblock KV writes back
+    into the full-depth cache tree: consecutive draft steps must see each
+    other's keys, and the verify forward later overwrites every position
+    the draft wrote (all layers, pos..pos+k ⊇ early layers, pos..pos+k-1),
+    so a rejected draft leaves no live state behind.
+    """
+    E = draft_layers
+
+    def draft_step(params, token, cache, pos):
+        p = dict(params)
+        p["layers"] = jax.tree.map(lambda x: x[:E], params["layers"])
+        sub = jax.tree.map(lambda x: x[:E], cache)
+        logits, new_sub, _ = M.forward(p, cfg, token, cache=sub, pos=pos)
+        cache = jax.tree.map(lambda full, new: full.at[:E].set(new),
+                             cache, new_sub)
+        return logits, cache
+
+    return draft_step
+
+
+def make_verify_step(cfg: ArchConfig):
+    """Batched speculative verify: (params, tokens (B, k+1), cache,
+    pos (B,)) → (logits (B, k+1, V), new_cache). Column 0 is each slot's
+    last emitted token, columns 1..k the draft; one full-depth forward in
+    decode_multi mode scores all k+1 next-token distributions while
+    writing KV at pos..pos+k per slot."""
+
+    def verify_step(params, tokens, cache, pos):
+        logits, cache, _ = M.forward(params, cfg, tokens, cache=cache,
+                                     pos=pos, decode_multi=True)
+        return logits, cache
+
+    return verify_step

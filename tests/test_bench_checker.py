@@ -1,0 +1,113 @@
+"""Exit-code contract of benchmarks/check_bench_regression.py.
+
+The checker is a CI gate, so its *failure* modes are load-bearing: a JSON
+with no comparable rows (schema drift, renamed table) must exit 2 — not
+"0 rows compared, pass" — and a baseline row missing from the new run
+must WARN but not fail (bench legs shrink under --smoke). These tests pin
+those paths; the happy path is covered end-to-end by the CI serve-smoke
+job itself.
+"""
+from __future__ import annotations
+
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+_CHECKER = (Path(__file__).resolve().parent.parent / "benchmarks"
+            / "check_bench_regression.py")
+
+
+def _load_checker():
+    spec = importlib.util.spec_from_file_location("check_bench_regression",
+                                                  _CHECKER)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _doc(rows):
+    return {"version": 1, "rows": rows}
+
+
+def _row(table, name, us):
+    return {"table": table, "name": name, "tuned_us": us}
+
+
+def _write(tmp_path, fname, rows):
+    p = tmp_path / fname
+    p.write_text(json.dumps(_doc(rows)))
+    return str(p)
+
+
+def test_unknown_table_exits_2(tmp_path, capsys):
+    """Rows only under an unrecognized table = schema drift → exit 2."""
+    chk = _load_checker()
+    new = _write(tmp_path, "new.json",
+                 [_row("not_a_table", "sa_matmul_2x256x512", 10.0)])
+    with pytest.raises(SystemExit) as e:
+        chk.load_rows(new)
+    assert e.value.code == 2
+    assert "no comparable rows" in capsys.readouterr().err
+
+
+def test_spec_verify_table_is_compared(tmp_path):
+    chk = _load_checker()
+    assert "spec_verify" in chk.COMPARED_TABLES
+    assert chk.RTOL_BY_TABLE["spec_verify"] >= 0.2
+    new = _write(tmp_path, "new.json",
+                 [_row("spec_verify", "sa_matmul_5x256x512", 10.0)])
+    rows, ref = chk.load_rows(new)
+    assert rows == {("spec_verify", "sa_matmul_5x256x512"): 10.0}
+    assert ref is None
+
+
+def test_no_overlap_returns_2(tmp_path, capsys):
+    """Disjoint row sets (e.g. full-config run vs smoke baseline) → 2."""
+    chk = _load_checker()
+    new = _write(tmp_path, "new.json",
+                 [_row("decode", "sa_matmul_1x256x512", 10.0)])
+    base = _write(tmp_path, "base.json",
+                  [_row("spec_verify", "sa_matmul_2x256x512", 10.0)])
+    assert chk.main([new, base, "--no-normalize"]) == 2
+    assert "no overlapping rows" in capsys.readouterr().err
+
+
+def test_missing_baseline_row_warns_but_passes(tmp_path, capsys):
+    """A baseline row absent from the new run warns; the overlap gates."""
+    chk = _load_checker()
+    shared = _row("spec_verify", "sa_matmul_2x256x512", 10.0)
+    new = _write(tmp_path, "new.json", [shared])
+    base = _write(tmp_path, "base.json",
+                  [shared, _row("spec_verify", "sa_matmul_9x256x512", 12.0)])
+    assert chk.main([new, base, "--no-normalize"]) == 0
+    out = capsys.readouterr().out
+    assert "WARN: baseline row" in out
+    assert "sa_matmul_9x256x512" in out
+
+
+def test_regression_beyond_table_rtol_fails(tmp_path):
+    """spec_verify's widened rtol holds at +30% and trips past it."""
+    chk = _load_checker()
+    base = _write(tmp_path, "base.json",
+                  [_row("spec_verify", "sa_matmul_5x256x512", 100.0)])
+    ok = _write(tmp_path, "ok.json",
+                [_row("spec_verify", "sa_matmul_5x256x512", 128.0)])
+    bad = _write(tmp_path, "bad.json",
+                 [_row("spec_verify", "sa_matmul_5x256x512", 140.0)])
+    assert chk.main([ok, base, "--no-normalize", "--rtol", "0.2"]) == 0
+    assert chk.main([bad, base, "--no-normalize", "--rtol", "0.2"]) == 1
+
+
+def test_committed_baseline_has_spec_verify_rows():
+    """The regenerated committed baseline actually carries the new table."""
+    chk = _load_checker()
+    rows, ref = chk.load_rows(str(_CHECKER.parent / "BENCH_baseline.json"))
+    assert any(t == "spec_verify" for t, _ in rows)
+    assert ref is not None  # machine-speed normalization stays available
+
+
+if __name__ == "__main__":
+    sys.exit(pytest.main([__file__, "-q"]))

@@ -237,6 +237,167 @@ def test_dropless_matches_capacity_when_nothing_drops():
                                    np.asarray(aux_d[k]), rtol=1e-6)
 
 
+# ---------------------------------------------------------------------------
+# self-speculative decoding (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def spec_setup():
+    """Two-superblock reduced stack: the minimum where an early-exit draft
+    (first superblock) differs from the verify forward (both)."""
+    cfg = dataclasses.replace(
+        reduced_config("qwen2.5-14b", layers_per_period=2), remat=False)
+    with use_policy(FP32):
+        params = M.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _spec_serve(cfg, params, prompts, budgets, *, eos_id=-1, spec_k=0,
+                draft_layers=None, kv_layout="paged", sync_every=4):
+    with use_policy(FP32):
+        engine = ServeEngine(cfg, params, batch=2, cache_len=64,
+                             eos_id=eos_id, sync_every=sync_every,
+                             kv_layout=kv_layout, spec_k=spec_k,
+                             spec_draft_layers=draft_layers)
+        sched = SlotScheduler(2, eos_id=eos_id)
+        for p, n in zip(prompts, budgets):
+            sched.submit(p, max_new_tokens=n)
+        summary = engine.serve(sched)
+    return engine, sched, summary
+
+
+@pytest.mark.parametrize("kv_layout", ["paged", "ring"])
+@pytest.mark.parametrize("draft_layers", [1, 2])
+def test_spec_greedy_identical_to_plain(spec_setup, kv_layout, draft_layers):
+    """The exactness contract: greedy spec decoding emits the same tokens
+    as the plain chunked scan, token for token, whatever the draft depth
+    or acceptance rate — rejected drafts cost wall time, never output.
+    draft_layers=2 (= the whole stack) is the accept-everything degenerate
+    case; draft_layers=1 is a real early exit with mixed acceptance."""
+    cfg, params = spec_setup
+    prompts = _prompts(cfg, [5, 9, 7], seed=17)
+    budgets = [10, 12, 8]          # 3 requests / 2 slots: refill mid-serve
+    _, plain, _ = _spec_serve(cfg, params, prompts, budgets,
+                              kv_layout=kv_layout, spec_k=0)
+    eng, spec, summary = _spec_serve(cfg, params, prompts, budgets,
+                                     kv_layout=kv_layout, spec_k=4,
+                                     draft_layers=draft_layers)
+    assert eng.spec_decoding_on()
+    plain_by = {r.rid: r.tokens for r in plain.finished}
+    spec_by = {r.rid: r.tokens for r in spec.finished}
+    assert spec_by == plain_by
+    assert spec.spec_drafted > 0
+    if draft_layers == 2:          # draft stack == verify stack
+        assert summary["spec_accept_rate"] == 1.0
+
+
+def test_spec_staggered_slots_mixed_accept_lengths(spec_setup):
+    """Slots sit at different depths (different prompt lengths, refills),
+    and each resolves its own accept length per iteration — the per-slot
+    `acc` indexes the rollback independently. Random init + a real early
+    exit gives a mix of accept lengths including full rejection."""
+    cfg, params = spec_setup
+    prompts = _prompts(cfg, [4, 11, 6, 9], seed=23)
+    budgets = [12, 10, 8, 12]
+    _, plain, _ = _spec_serve(cfg, params, prompts, budgets, spec_k=0)
+    _, spec, _ = _spec_serve(cfg, params, prompts, budgets, spec_k=4,
+                             draft_layers=1)
+    assert ({r.rid: r.tokens for r in spec.finished}
+            == {r.rid: r.tokens for r in plain.finished})
+    # the histogram actually spans lengths: not accept-all, not reject-all
+    assert len(spec.spec_accept_hist) >= 2
+
+
+def test_spec_reject_all_falls_back_to_one_token(spec_setup):
+    """When the verify rejects every draft the iteration still makes
+    progress: the verify's own first row is a normal decode step, so one
+    token lands (`acc = 0` → emit targets[:, 0] only)."""
+    cfg, params = spec_setup
+    prompts = _prompts(cfg, [6, 8], seed=29)
+    _, plain, _ = _spec_serve(cfg, params, prompts, [8, 8], spec_k=0)
+    _, spec, summary = _spec_serve(cfg, params, prompts, [8, 8], spec_k=4,
+                                   draft_layers=1)
+    # random init: a depth-1 draft almost never matches the full stack
+    # over a 503-way vocab, so reject-all iterations definitely occurred
+    assert spec.spec_accept_hist.get(0, 0) > 0
+    assert ({r.rid: r.tokens for r in spec.finished}
+            == {r.rid: r.tokens for r in plain.finished})
+    assert summary["spec_accept_rate"] < 1.0
+    assert summary["generated_tokens"] == 16      # progress despite rejects
+
+
+def test_spec_eos_mid_draft_truncates_and_frees(spec_setup):
+    """EOS landing inside an accepted draft block: tokens after the EOS in
+    the same block are discarded, the request retires with finish_reason
+    'eos', and its pages return to the pool (nothing leaks)."""
+    cfg, params = spec_setup
+    prompts = _prompts(cfg, [6, 8], seed=31)
+    with use_policy(FP32):
+        probe = _reference_decode(cfg, params, prompts[1], 10)
+    eos = probe[2]                 # 3rd emitted token: mid spec block
+    _, plain, _ = _spec_serve(cfg, params, prompts, [12, 12], eos_id=eos,
+                              spec_k=0)
+    _, spec, summary = _spec_serve(cfg, params, prompts, [12, 12],
+                                   eos_id=eos, spec_k=4, draft_layers=2)
+    spec_by = {r.rid: r for r in spec.finished}
+    plain_by = {r.rid: r for r in plain.finished}
+    assert spec_by[1].tokens == plain_by[1].tokens
+    assert spec_by[1].finish_reason == "eos"
+    assert spec_by[1].tokens[-1] == eos
+    # spec_k=4, draft_layers = full stack → the whole 5-token block was
+    # accepted; everything past the EOS at index 2 must have been dropped
+    assert spec_by[1].n_generated == 3
+    assert spec_by[0].tokens == plain_by[0].tokens
+    assert summary["pages_leaked"] == 0
+
+
+def test_spec_chunk_jit_key_includes_spec_k(spec_setup):
+    """Regression: the chunk closure cache must key on spec_k next to
+    (steps, greedy, mode) — a 1-iteration spec chunk and a 1-step plain
+    chunk would otherwise collide and serve each other's traced fn."""
+    cfg, params = spec_setup
+    with use_policy(FP32):
+        engine = ServeEngine(cfg, params, batch=2, cache_len=64,
+                             eos_id=-1, spec_k=4)
+        plain = engine._chunk_fn(1, True)
+        spec = engine._spec_chunk_fn(1, True, "exact", 4)
+    assert plain is not spec
+    assert set(engine._chunks) == {(1, True, "exact", 0),
+                                   (1, True, "exact", 4)}
+
+
+def test_spec_gating_auto_disables(spec_setup):
+    """spec_decoding_on() refuses configurations the math can't support:
+    spec_k=0, a single-superblock stack (no early exit), a ring shorter
+    than the verify block, and the REPRO_SPEC_DECODE kill switch."""
+    cfg2, params2 = spec_setup
+    cfg1 = dataclasses.replace(reduced_config("qwen2.5-14b"), remat=False)
+    with use_policy(FP32):
+        params1 = M.init_params(jax.random.key(0), cfg1)
+        assert not ServeEngine(cfg2, params2, batch=2, cache_len=64,
+                               eos_id=-1, spec_k=0).spec_decoding_on()
+        assert not ServeEngine(cfg1, params1, batch=2, cache_len=64,
+                               eos_id=-1, spec_k=4).spec_decoding_on()
+        on = ServeEngine(cfg2, params2, batch=2, cache_len=64, eos_id=-1,
+                         spec_k=4)
+        assert on.spec_decoding_on()
+    import os
+    os.environ["REPRO_SPEC_DECODE"] = "0"
+    try:
+        assert not on.spec_decoding_on()
+    finally:
+        del os.environ["REPRO_SPEC_DECODE"]
+
+
+def test_tune_spec_verify_covers_decode_and_verify_m():
+    """The pre-seed sweeps exactly the two Ms the spec chunk runs at:
+    the per-token rows (M = batch) and the folded verify (batch·(k+1))."""
+    from repro.kernels.autotune import tune_spec_verify
+    got = tune_spec_verify(128, 64, 2, 4, dtype="float32", reps=1)
+    assert set(got) == {2, 10}
+    assert all(len(b) == 3 for b in got.values())
+
+
 def test_staggered_positions_decode_vector(dense_setup):
     """Direct (B,) position-vector check: two sequences decoded at
     *different* depths in one batch match their batch-1 references."""

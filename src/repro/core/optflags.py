@@ -134,6 +134,41 @@ def prefix_cache_enabled() -> bool:
         "0", "false", "off")
 
 
+def disagg_enabled() -> bool:
+    """Disaggregated prefill/decode serving (reads REPRO_DISAGG at call
+    time, default off — opt-in, same contract as `prefix_cache_enabled`).
+    When on, paged serve engines split into a prefill pool and a decode
+    pool with an explicit KV-page handoff (DESIGN.md §10): prefill workers
+    run dense batch-1 prefill into a staging fragment, the finished pages
+    are scattered whole into the shared pool, and decode admissions drain
+    a ready queue of already-prefilled requests between chunks — decode
+    never waits on prefill compute, only on the handoff splice. "1" and
+    "0" are pinned token-identical on the greedy stream digest (CI
+    serve-smoke), so the knob trades scheduling only, never tokens.
+    Engines auto-disable the split where pages are not a pure function of
+    the prompt (ring layout, local-window rings, ssm/hybrid state) — the
+    same gate family as prefix sharing."""
+    return os.environ.get("REPRO_DISAGG", "0") not in ("0", "false", "off")
+
+
+def prefill_bucket_enabled() -> bool:
+    """Prompt-length bucketing in the serve prefill path (reads
+    REPRO_PREFILL_BUCKET at call time, default off). When on, attention-
+    only engines pad each prefill's token block up to a powers-of-two-ish
+    bucket length, so mixed --prompt-lens streams reuse a handful of jit
+    traces instead of retracing per distinct length (the summary's
+    `prefill_compiles` counts distinct traces). Padded rows are masked
+    after the fact: their cache positions are forced to -1 (invisible to
+    the attention mask, exactly like empty ring entries) and the logits
+    are taken at the real last token via `last_index`, so real rows come
+    out of the same causal arithmetic. Engines auto-disable bucketing for
+    layouts where padded writes could touch live state (local-window
+    rings, ssm/hybrid recurrence) — right-padding a recurrence advances
+    it through garbage tokens."""
+    return os.environ.get("REPRO_PREFILL_BUCKET", "0") not in (
+        "0", "false", "off")
+
+
 def spec_decode_enabled() -> bool:
     """Self-speculative decoding kill-switch (reads REPRO_SPEC_DECODE at
     call time, default on — same contract as `prefix_cache_enabled`).

@@ -96,7 +96,7 @@ def memory_dict(compiled) -> dict:
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
              keep_text: bool = False, accum: int | None = None,
-             kv: str = "ring") -> dict:
+             kv: str = "ring", disagg: bool = False) -> dict:
     cfg = get_config(arch)
     shape = SHAPES_BY_NAME[shape_name]
     ok, why = SP.cell_is_applicable(cfg, shape)
@@ -151,17 +151,45 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         }
         if keep_text:
             rec["hlo_text"] = text
+        if (disagg and shape.kind == "decode" and kv == "paged"
+                and cfg.family != "ssm"):
+            # two-pool lowering (DESIGN.md §10): additionally compile the
+            # KV-page handoff program — the scatter+bind splice the
+            # disaggregated engine pays per prefill completion — on the
+            # same mesh and pool shardings, so the artifact answers "what
+            # does one handoff cost here" next to the decode step itself
+            t_h = time.time()
+            h_fn, h_args, h_in, h_out = SP.handoff_specs(cfg, shape, mesh)
+            with mesh:
+                h_jit = jax.jit(h_fn, in_shardings=h_in,
+                                out_shardings=h_out, donate_argnums=(0,))
+                h_comp = h_jit.lower(*h_args).compile()
+            h_text = h_comp.as_text()
+            from repro.launch.hlo_cost import HLOCost as _HC
+            hh = _HC(h_text).summary()
+            rec["handoff"] = {
+                "compile_s": round(time.time() - t_h, 2),
+                "memory": memory_dict(h_comp),
+                "flops": hh["flops"],
+                "bytes_accessed": hh["bytes"],
+                "collectives": {"total": hh["collective_bytes"],
+                                **hh["collectives_by_class"]},
+            }
     except Exception as e:  # a failing cell is a bug: record it loudly
         rec |= {"status": "error", "error": f"{type(e).__name__}: {e}",
                 "traceback": traceback.format_exc()[-4000:]}
     return rec
 
 
-def cell_path(arch: str, shape: str, mesh: str, kv: str = "ring") -> str:
+def cell_path(arch: str, shape: str, mesh: str, kv: str = "ring",
+              disagg: bool = False) -> str:
     """Non-default KV layouts get their own artifact namespace so a paged
-    sweep never collides with (or --resume-skips into) the ring records."""
+    sweep never collides with (or --resume-skips into) the ring records;
+    disagg sweeps (decode cell + handoff program) likewise."""
     os.makedirs(ART_DIR, exist_ok=True)
     suffix = "" if kv == "ring" else f"__kv-{kv}"
+    if disagg:
+        suffix += "__disagg"
     return os.path.join(ART_DIR, f"{arch}__{shape}__{mesh}{suffix}.json")
 
 
@@ -178,6 +206,10 @@ def main():
     ap.add_argument("--kv", default="ring", choices=("ring", "paged"),
                     help="KV layout for decode cells: per-slot dense rings "
                          "or the paged pool + block table (DESIGN.md §5)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="two-pool lowering: also compile the KV-page "
+                         "handoff program for paged decode cells "
+                         "(DESIGN.md §10); records a 'handoff' section")
     args = ap.parse_args()
 
     # lower the TPU-true program (bf16 containers), not the CPU-exec variant
@@ -190,14 +222,15 @@ def main():
     for arch in archs:
         for shape in shapes:
             for mesh_kind in meshes:
-                path = cell_path(arch, shape, mesh_kind, kv=args.kv)
+                path = cell_path(arch, shape, mesh_kind, kv=args.kv,
+                                 disagg=args.disagg)
                 if args.resume and os.path.exists(path):
                     with open(path) as f:
                         old = json.load(f)
                     if old.get("status") in ("ok", "skipped"):
                         continue
                 rec = run_cell(arch, shape, mesh_kind, accum=args.accum,
-                               kv=args.kv)
+                               kv=args.kv, disagg=args.disagg)
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)
                 status = rec["status"]

@@ -161,6 +161,46 @@ def preseed_decode_blocks(cfg, batch: int, page_size: int | None = None,
                                   page_size, max_pages, reps=2)
 
 
+def _itl_p50_ms(finished) -> float | None:
+    """Median per-request inter-token latency (ms): decode wall after the
+    first token / tokens after the first. The disagg acceptance metric —
+    it must stay flat while decode stalls drop."""
+    itls = [(r.t_done - r.t_first_token) / (r.n_generated - 1)
+            for r in finished
+            if r.t_first_token is not None and r.t_done is not None
+            and r.n_generated >= 2]
+    if not itls:
+        return None
+    return round(float(np.percentile(itls, 50)) * 1000, 3)
+
+
+def _print_phases(summary) -> None:
+    """Honest per-phase wall split (engine.serve accounting comment):
+    prefill/decode busy walls are real measurements in both modes;
+    decode_stall is the decode-blocking component — the whole admission
+    prefill in unified mode, only the synced handoff in two-pool mode."""
+    print(f"[phases] disagg={summary.get('disagg')} "
+          f"prefill_busy={summary.get('prefill_busy_s')}s "
+          f"decode_busy={summary.get('decode_busy_s')}s "
+          f"handoff={summary.get('handoff_s')}s "
+          f"decode_stall={summary.get('decode_stall_s')}s "
+          f"itl_p50={summary.get('decode_itl_p50_ms')}ms "
+          f"ready_p50={summary.get('ready_depth_p50')} "
+          f"prefill_compiles={summary.get('prefill_compiles')}")
+
+
+def _make_engine(args, cfg, params) -> ServeEngine:
+    return ServeEngine(cfg, params, args.batch, args.cache_len,
+                       eos_id=args.eos_id, sync_every=args.sync_every,
+                       kv_layout=args.kv, page_size=args.page_size,
+                       pool_pages=args.pool_pages,
+                       max_seq_len=args.max_seq_len, spec_k=args.spec_k,
+                       spec_draft_layers=args.spec_draft_layers or None,
+                       disagg=args.disagg or None,
+                       prefill_workers=args.prefill_workers,
+                       bucket_prompts=args.bucket_prompts or None)
+
+
 def serve_continuous(args, cfg, params, plens) -> dict:
     if args.autotune_decode:
         import os as _os
@@ -170,12 +210,7 @@ def serve_continuous(args, cfg, params, plens) -> dict:
         preseed_decode_blocks(cfg, args.batch,
                               page_size=args.page_size if paged else None,
                               max_pages=max_pages, spec_k=args.spec_k)
-    engine = ServeEngine(cfg, params, args.batch, args.cache_len,
-                         eos_id=args.eos_id, sync_every=args.sync_every,
-                         kv_layout=args.kv, page_size=args.page_size,
-                         pool_pages=args.pool_pages,
-                         max_seq_len=args.max_seq_len, spec_k=args.spec_k,
-                         spec_draft_layers=args.spec_draft_layers or None)
+    engine = _make_engine(args, cfg, params)
     sched = SlotScheduler(args.batch, eos_id=args.eos_id)
     build_requests(sched, cfg, args.requests, args.rate, plens,
                    args.max_new, args.seed, tier_mix=args.tier_mix,
@@ -189,6 +224,10 @@ def serve_continuous(args, cfg, params, plens) -> dict:
         f"{r.rid}:{'-'.join(map(str, r.tokens))}"
         for r in sorted(sched.finished, key=lambda r: r.rid))
     summary["stream_digest"] = hashlib.sha1(streams.encode()).hexdigest()[:16]
+    itl = _itl_p50_ms(sched.finished)
+    if itl is not None:
+        summary["decode_itl_p50_ms"] = itl
+    _print_phases(summary)
     if engine.spec_decoding_on() and summary.get("spec_iters"):
         # honest accounting: decode_tok_s above already counts only
         # accepted tokens (rejected drafts never reach a Request); the
@@ -230,6 +269,85 @@ def serve_continuous(args, cfg, params, plens) -> dict:
               f"max_ulp={probe['max_ulp']} kl_mean={probe['kl_mean']:.3e} "
               f"max_abs_diff={probe['max_abs_diff']:.3e}")
         summary |= {f"divergence_{k}": v for k, v in probe.items()}
+    return summary
+
+
+def serve_replicas(args, cfg, params, plens) -> dict:
+    """`--decode-replicas N`: N data-parallel engine replicas behind one
+    shared arrival stream (DESIGN.md §10). The stream is built once, then
+    each request is routed up-front in arrival order by pick-least-loaded
+    (scheduler.ReplicaRouter — a pure function of the submitted stream, so
+    the aggregate digest is reproducible and replica-count-independent
+    routing ties go to the lowest index). Single-host emulation: replicas
+    share `params` and serve SEQUENTIALLY on this process's devices, so
+    per-replica walls and ITL are real; the aggregate reports the modeled
+    parallel wall = max(replica walls) next to the serial wall actually
+    paid. Requests keep their global rids across replicas, so the
+    aggregate `stream_digest` is comparable with a 1-replica run of the
+    same stream."""
+    import hashlib
+
+    from repro.serve.scheduler import ReplicaRouter
+
+    n = args.decode_replicas
+    master = SlotScheduler(args.batch, eos_id=args.eos_id)
+    build_requests(master, cfg, args.requests, args.rate, plens,
+                   args.max_new, args.seed, tier_mix=args.tier_mix,
+                   prefix_mix=args.prefix_mix, prefix_len=args.prefix_len)
+    router = ReplicaRouter(n)
+    scheds = [SlotScheduler(args.batch, eos_id=args.eos_id)
+              for _ in range(n)]
+    for req in master.pending:     # already arrival-sorted
+        i = router.route(req.prompt_len, req.max_new_tokens)
+        r2 = scheds[i].submit(req.prompt, req.max_new_tokens,
+                              arrival_time=req.arrival_time, tier=req.tier)
+        r2.rid = req.rid           # global rid: aggregate digest key
+
+    summaries = []
+    finished = []
+    for i, sched in enumerate(scheds):
+        engine = _make_engine(args, cfg, params)
+        s = engine.serve(sched, greedy=True)
+        s["decode_itl_p50_ms"] = _itl_p50_ms(sched.finished)
+        summaries.append(s)
+        finished.extend(sched.finished)
+        print(f"[replica {i}] requests={s['requests']} "
+              f"wall_s={s['wall_s']} decode_tok_s={s['decode_tok_s']} "
+              f"itl_p50={s['decode_itl_p50_ms']}ms "
+              f"pages_leaked={s.get('pages_leaked')} "
+              f"decode_stall={s.get('decode_stall_s')}s")
+
+    def total(key):
+        return round(sum(s.get(key) or 0 for s in summaries), 4)
+
+    streams = ",".join(
+        f"{r.rid}:{'-'.join(map(str, r.tokens))}"
+        for r in sorted(finished, key=lambda r: r.rid))
+    summary = {
+        "replicas": n,
+        "requests": sum(s["requests"] for s in summaries),
+        "generated_tokens": sum(s["generated_tokens"] for s in summaries),
+        "rejected": sum(s.get("rejected", 0) for s in summaries),
+        "pages_leaked": total("pages_leaked"),
+        "prefill_busy_s": total("prefill_busy_s"),
+        "decode_busy_s": total("decode_busy_s"),
+        "handoff_s": total("handoff_s"),
+        "decode_stall_s": total("decode_stall_s"),
+        "prefill_compiles": sum(s.get("prefill_compiles", 0)
+                                for s in summaries),
+        # serial = what this single-host emulation paid; parallel = the
+        # deployment model (replicas run concurrently, wall = slowest)
+        "wall_s_serial": total("wall_s"),
+        "wall_s_parallel": round(max(s["wall_s"] for s in summaries), 4),
+        "disagg": summaries[0].get("disagg"),
+        "ready_depth_p50": summaries[0].get("ready_depth_p50"),
+        "stream_digest":
+            hashlib.sha1(streams.encode()).hexdigest()[:16],
+    }
+    itl = _itl_p50_ms(finished)
+    if itl is not None:
+        summary["decode_itl_p50_ms"] = itl
+    _print_phases(summary)
     return summary
 
 
@@ -336,6 +454,28 @@ def main(argv=None):
                          "(d_model/d_ff × width) — width >= 4 leaves the "
                          "dispatch-bound floor so depth-proportional "
                          "speedups (--spec-k) are measurable")
+    ap.add_argument("--disagg", action="store_true",
+                    help="two-pool disaggregated serving (DESIGN.md §10): "
+                         "prefill workers stage finished prompts' KV pages "
+                         "and a ready queue feeds decode admissions, so "
+                         "decode chunks never block on a prefill. Paged "
+                         "layout only; token-identical to unified "
+                         "(REPRO_DISAGG=1 is the env equivalent)")
+    ap.add_argument("--prefill-workers", type=int, default=1,
+                    help="prefill-pool width under --disagg: prompts staged "
+                         "per scheduler tick before decode resumes")
+    ap.add_argument("--decode-replicas", type=int, default=1,
+                    help="N data-parallel engine replicas behind the shared "
+                         "arrival queue, routed pick-least-loaded "
+                         "(scheduler.ReplicaRouter); served sequentially "
+                         "on this host, parallel wall modeled as "
+                         "max(replica walls)")
+    ap.add_argument("--bucket-prompts", action="store_true",
+                    help="prompt-length bucketing for attention-only archs: "
+                         "pad prefill to ~1.5x-spaced buckets to cut jit "
+                         "retraces (summary: prefill_compiles); "
+                         "token-identical (REPRO_PREFILL_BUCKET=1 is the "
+                         "env equivalent)")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="EOS token id (-1: never fires on synthetic vocab)")
     ap.add_argument("--autotune-decode", action="store_true",
@@ -360,6 +500,9 @@ def main(argv=None):
     if cfg.family == "vlm" or cfg.is_encdec:
         summary = serve_static(args, cfg, params, plens)
         mode = "static"
+    elif args.decode_replicas > 1:
+        summary = serve_replicas(args, cfg, params, plens)
+        mode = f"replicas x{args.decode_replicas}"
     else:
         summary = serve_continuous(args, cfg, params, plens)
         mode = "continuous"

@@ -134,6 +134,41 @@ def input_specs(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh,
     raise ValueError(shape.kind)
 
 
+def handoff_specs(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh,
+                  page_size: int = DEFAULT_PAGE_SIZE):
+    """Two-pool lowering (DESIGN.md §10): the KV-page handoff program —
+    page scatter + block-table bind (`ServeEngine._insert_impl`; the
+    disaggregated engine runs the same two halves split across pools) —
+    lowered against the decode cell's paged pool. Dry-run's honest answer
+    to "what does one handoff cost on this mesh": the batch-1 fragment
+    arrives replicated over the data axes
+    (parallel/sharding.handoff_frag_specs), so the scatter keeps each
+    data shard's pages local and collectives stay O(fragment), never
+    O(pool). → (step_fn, abstract_args, in_shardings, out_shardings)."""
+    from repro.serve.engine import ServeEngine
+    GB, T = shape.global_batch, shape.seq_len
+    repl = NamedSharding(mesh, P())
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    pool = pool_pages_for(mesh, GB, T, page_size)
+    cache = M.init_cache(cfg, GB, T, dtype=jnp.bfloat16, abstract=True,
+                         kv_pad_to=sizes.get("model", 1),
+                         paged=(pool, page_size))
+    cshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                          S.cache_specs(cfg, cache, mesh, GB))
+    # staging fragment: one full-length prompt, page-quantized
+    cap = -(-T // page_size) * page_size
+    frag = M.init_cache(cfg, 1, cap, dtype=jnp.bfloat16, abstract=True,
+                        kv_pad_to=sizes.get("model", 1))
+    fshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                          S.handoff_frag_specs(cfg, frag, mesh))
+    slot = jax.ShapeDtypeStruct((), jnp.int32)
+    block_row = jax.ShapeDtypeStruct((cap // page_size,), jnp.int32)
+    keep = jax.ShapeDtypeStruct((), jnp.int32)
+    args = (cache, frag, slot, block_row, keep)
+    in_sh = (cshard, fshard, repl, repl, repl)
+    return ServeEngine._insert_impl, args, in_sh, cshard
+
+
 def cell_is_applicable(cfg: ArchConfig, shape: ShapeCfg) -> tuple[bool, str]:
     """DESIGN.md §5: long_500k is skipped for pure full-attention archs."""
     if shape.name == "long_500k" and not cfg.sub_quadratic:

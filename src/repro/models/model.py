@@ -343,7 +343,7 @@ def encode(params, cfg: ArchConfig, frontend_embeds):
 
 def forward(params, cfg: ArchConfig, tokens, *, positions=None, cache=None,
             pos=None, frontend_embeds=None, last_only: bool = False,
-            prefix_len: int = 0, decode_multi: bool = False):
+            last_index=None, prefix_len: int = 0, decode_multi: bool = False):
     """Token ids (B, T) → logits. Returns (logits, new_cache, aux).
 
     `cache`/`pos` engage the decode path; `pos` is a (B,) int32 vector of
@@ -356,7 +356,11 @@ def forward(params, cfg: ArchConfig, tokens, *, positions=None, cache=None,
     hold pre-loaded KV (serve prefix-cache hits; see layers.attention_block).
     `decode_multi` (static) marks the T tokens as T consecutive *decode*
     steps per slot (speculative verify, DESIGN.md §9) instead of a prefill
-    fragment — row t writes and attends at position pos+t.
+    fragment — row t writes and attends at position pos+t. `last_index`
+    (traced, used with `last_only`) selects WHICH row feeds the lm_head
+    instead of the static -1: bucketed prefill (serve prompt-length
+    bucketing) right-pads the token block, so the real prompt's logits
+    live at row `last_index`, not the padded block's end.
     """
     B, T = tokens.shape
     if decode_multi and (cfg.family == "ssm" or cfg.hybrid):
@@ -429,7 +433,11 @@ def forward(params, cfg: ArchConfig, tokens, *, positions=None, cache=None,
            "router_z": jnp.sum(aux_sb[:, 1])}
     x = L.norm_apply(x, params["final_norm"], cfg.norm, cfg.norm_eps)
     if last_only:
-        x = x[:, -1:]
+        if last_index is not None:
+            x = lax.dynamic_slice_in_dim(
+                x, jnp.asarray(last_index, jnp.int32), 1, axis=1)
+        else:
+            x = x[:, -1:]
     head = params.get("lm_head", None)
     if head is None:
         head = params["embed"].T

@@ -269,3 +269,65 @@ def activation_spec(mesh: Mesh, batch: int):
     """with_sharding_constraint target for the residual stream."""
     ba = batch_axes(mesh)
     return P(ba, None, None)
+
+
+def handoff_frag_specs(cfg: ArchConfig, frag_tree: Any, mesh: Mesh):
+    """PartitionSpecs for a dense batch-1 prefill fragment being handed
+    off to a paged pool (disaggregated serving, DESIGN.md §10).
+
+    The pool shards KV heads over `model` (`cache_specs`), so the
+    fragment matches on the head dims — the page scatter then never
+    reshards the head axis. The token dim is deliberately REPLICATED over
+    the data axes: the pool's *page* dim is data-sharded and a fragment's
+    pages scatter to arbitrary page slots, so each data shard needs
+    exactly the whole pages that land in its page range — moving the
+    (small, whole-page-quantized) fragment to every data shard IS the
+    handoff's `device_put`, and the scatter keeps the rows local to each
+    shard. Granularity is whole pages by construction: no per-token
+    traffic. `cache_specs(batch=1)`'s sequence-parallel fallback is wrong
+    here — it would split a page's rows across data shards and force a
+    gather inside the scatter."""
+    from repro.models.layers import KVCache
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fit(spec, shape):
+        def axis_size(a):
+            if a is None:
+                return 1
+            axes = a if isinstance(a, tuple) else (a,)
+            n = 1
+            for x in axes:
+                n *= sizes[x]
+            return n
+        return P(*(a if d % axis_size(a) == 0 else None
+                   for a, d in zip(tuple(spec), shape)))
+
+    def spec_for(leaf):
+        if isinstance(leaf, KVCache):
+            # k/v: (n_super, 1, S, KVH, hd) — heads like the pool, token
+            # dim replicated (see docstring)
+            if leaf.k.shape[3] % sizes.get("model", 1) == 0:
+                kv_spec, hd_spec = "model", None
+            else:
+                kv_spec, hd_spec = None, "model"
+            kv = P(None, None, None, kv_spec, hd_spec)
+            return KVCache(k=fit(kv, leaf.k.shape),
+                           v=fit(kv, leaf.v.shape),
+                           positions=P(None, None, None))
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree.map(spec_for, frag_tree,
+                        is_leaf=lambda x: isinstance(x, KVCache))
+
+
+def reshard_handoff(frag: Any, mesh: Mesh | None, cfg: ArchConfig):
+    """`device_put` a staged prefill fragment onto the pool-compatible
+    layout (`handoff_frag_specs`) — the explicit page-handoff transfer of
+    the disaggregated serve loop (ServeEngine._serve two-pool path).
+    Identity when no mesh is given (single-host CPU engines)."""
+    if mesh is None:
+        return frag
+    specs = handoff_frag_specs(cfg, frag, mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        frag, specs)

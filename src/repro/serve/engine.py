@@ -29,6 +29,25 @@ Architecture (DESIGN.md §Serving):
   map few, and admission is gated on free *pages*, not free slots. The
   prefill fragment stays dense; `_insert` page-scatters it into the pool.
   `generate()` (static batches, frontend archs) always uses dense rings.
+* **Disaggregated two-pool mode** (``REPRO_DISAGG=1`` / ``disagg=True``,
+  DESIGN.md §10) — prefill and decode become separately-scheduled pools:
+  prefill workers run dense batch-1 prefill into a staging fragment, the
+  handoff scatters the finished pages whole into the shared pool
+  (`_scatter` — ownership moves, not per-token copies), and the prefilled
+  request waits on the scheduler's READY queue until a decode slot frees;
+  binding then costs only the block-table splice (`_bind`). Decode chunks
+  never wait on prefill compute — only on the handoff splice. The unified
+  path's `_insert` is exactly `_scatter` + `_bind` composed in one jitted
+  program, so the split cannot change tokens: ``REPRO_DISAGG=1|0`` is
+  pinned token-identical on the stream digest (CI serve-smoke).
+* **Prompt-length bucketing** (``REPRO_PREFILL_BUCKET=1`` /
+  ``bucket_prompts=True``) — attention-only engines pad each prefill
+  suffix up to a powers-of-two-ish bucket so mixed prompt-length streams
+  share O(log) jit traces instead of one per distinct length; padded rows
+  get positions -1 (invisible to the attention mask, like empty ring
+  entries) and the first token reads the real last row via `last_index`.
+  The summary's `prefill_compiles` counts distinct prefill traces either
+  way.
 """
 from __future__ import annotations
 
@@ -48,13 +67,25 @@ from repro.kernels.ops import fused_decode_supported
 from repro.models.config import ArchConfig
 from repro.models import model as M
 from repro.models.layers import KVCache, PagedKVCache
-from repro.train.step import (make_draft_step, make_prefill_step,
-                              make_serve_step, make_verify_step)
+from repro.parallel import sharding as shardlib
+from repro.train.step import (make_bucketed_prefill_step, make_draft_step,
+                              make_prefill_step, make_serve_step,
+                              make_verify_step)
 from .scheduler import PageAllocator, SlotScheduler
 
 
 def _round_up(x: int, m: int) -> int:
     return -(-int(x) // m) * m
+
+
+def _bucket_len(n: int) -> int:
+    """Smallest powers-of-two-ish length (8, 12, 16, 24, 32, 48, 64, …)
+    ≥ n: neighbours are ≤ 1.5× apart, so bucketed prefill pads ≤ 50 % in
+    the worst case while a mixed-length stream shares O(log) jit traces."""
+    b = 8
+    while b < n:
+        b = b * 3 // 2 if (b & (b - 1)) == 0 else b * 4 // 3
+    return b
 
 
 class ServeEngine:
@@ -63,7 +94,9 @@ class ServeEngine:
                  sync_every: int = 8, kv_layout: str | None = None,
                  page_size: int = 16, pool_pages: int | None = None,
                  max_seq_len: int | None = None, spec_k: int | None = None,
-                 spec_draft_layers: int | None = None):
+                 spec_draft_layers: int | None = None,
+                 disagg: bool | None = None, prefill_workers: int = 1,
+                 bucket_prompts: bool | None = None):
         """`cache_len` is the per-request capacity of the ring layout and
         the pool-sizing reference of the paged one: by default the pool
         holds the same `batch · cache_len` tokens (plus the trash page) a
@@ -77,7 +110,13 @@ class ServeEngine:
         draft length (DESIGN.md §9): each serve iteration drafts spec_k
         tokens with an early-exit forward over the first
         `spec_draft_layers` superblocks (default: half the stack) and
-        verifies them in one batched M = spec_k+1 forward."""
+        verifies them in one batched M = spec_k+1 forward.
+
+        `disagg` (default: REPRO_DISAGG) selects the two-pool serve loop
+        (DESIGN.md §10); `prefill_workers` is how many prefills the
+        prefill pool runs per decode chunk. `bucket_prompts` (default:
+        REPRO_PREFILL_BUCKET) pads prefill suffixes to bucket lengths —
+        see `bucketing_on` for the soundness gate."""
         self.cfg = cfg
         self.params = params
         self.batch = batch
@@ -114,6 +153,14 @@ class ServeEngine:
         # drivers already quantize prompt lengths, and shared spans are
         # page-quantized, so the population stays small
         self._prefills: dict[int, Any] = {0: self._prefill}
+        self._bucketed_prefills: dict[int, Any] = {}
+        # distinct prefill trace shapes seen: (prefix_len, T, bucketed) —
+        # the summary's `prefill_compiles`, the quantity bucketing exists
+        # to shrink
+        self._prefill_shapes: set[tuple[int, int, bool]] = set()
+        self._disagg_arg = disagg
+        self.prefill_workers = max(1, int(prefill_workers))
+        self._bucket_arg = bucket_prompts
         self._serve_step = make_serve_step(cfg)
         self.spec_k = (optflags.spec_k() if spec_k is None
                        else max(0, int(spec_k)))
@@ -128,6 +175,8 @@ class ServeEngine:
         # same aliasing the divergence probe hit with shared mode traces.
         self._chunks: dict[tuple[int, bool, str, int], Any] = {}
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        self._scatter = jax.jit(self._scatter_impl, donate_argnums=(0,))
+        self._bind = jax.jit(self._bind_impl, donate_argnums=(0,))
         self._clear_slot = jax.jit(self._clear_slot_impl, donate_argnums=(0,))
         self._load_prefix = jax.jit(self._load_prefix_impl,
                                     static_argnums=(3,), donate_argnums=(0,))
@@ -159,6 +208,31 @@ class ServeEngine:
         return (optflags.prefix_cache_enabled()
                 and self.kv_layout == "paged"
                 and self._frag_floor == 1
+                and self.cfg.family != "ssm" and not self.cfg.hybrid)
+
+    def disagg_on(self) -> bool:
+        """The two-pool split is sound exactly where prefix sharing is:
+        a handed-off page run must mean the same thing to whichever decode
+        slot eventually binds it, i.e. pages must be a pure function of
+        the prompt — paged layout, no local-window dense rings, no
+        per-slot recurrent state. Opt-in (REPRO_DISAGG / constructor
+        `disagg`); ineligible engines silently serve unified, same
+        convention as `spec_decoding_on`."""
+        on = (self._disagg_arg if self._disagg_arg is not None
+              else optflags.disagg_enabled())
+        return (on and self.kv_layout == "paged"
+                and self._frag_floor == 1
+                and self.cfg.family != "ssm" and not self.cfg.hybrid)
+
+    def bucketing_on(self) -> bool:
+        """Prompt-length bucketing is sound only for pure-attention
+        stacks: right-padding advances ssm/hybrid recurrent state through
+        garbage tokens, and local-window ring writes past the real length
+        could wrap onto live rows. Opt-in (REPRO_PREFILL_BUCKET /
+        constructor `bucket_prompts`)."""
+        on = (self._bucket_arg if self._bucket_arg is not None
+              else optflags.prefill_bucket_enabled())
+        return (on and self._frag_floor == 1
                 and self.cfg.family != "ssm" and not self.cfg.hybrid)
 
     def spec_decoding_on(self) -> bool:
@@ -203,56 +277,107 @@ class ServeEngine:
     # ------------------------------------------------------------------
 
     @staticmethod
+    def _scatter_impl(cache, frag, block_row, keep=0):
+        """Pool half of the fragment splice: write a batch-1 fragment's
+        rows into the global page pool WITHOUT touching any slot's block
+        table. This is the disaggregated handoff (DESIGN.md §10) — the
+        request may sit on the ready queue for many chunks before
+        `_bind_impl` maps its pages into a decode slot, and until then no
+        block table references them, so the writes race with nothing.
+
+        The fragment's rows land at flat offsets
+        `block_row[t // psz] · psz + t % psz`, after wiping the positions
+        of *every* page in `block_row` to -1 — recycled pages still hold
+        the previous owner's positions, which would otherwise be visible
+        to the attention mask. `block_row` is the request's (max_pages,)
+        page run, -1-padded.
+
+        `keep` (prefix sharing) is the count of leading block-row pages
+        that are cache-hit SHARED pages: they already hold the right KV,
+        other readers may be attending to them concurrently, and this
+        request must never write them — both the wipe and the scatter
+        redirect those pages to the reserved trash page 0 (writes there
+        are harmless by the same convention unmapped decode writes rely
+        on). A COW'd tail page is NOT kept: its rows ride in the fragment
+        (pre-loaded from the donor) and the scatter into the request's own
+        page IS the copy-on-write. Dense leaves (local rings, ssm/conv
+        state) pass through — they have no pool; `_insert_impl` row-splices
+        them."""
+        def splice(full, one):
+            if not isinstance(full, PagedKVCache):
+                return full
+            n_super, n_pages, psz = full.k.shape[:3]
+            s_frag = one.k.shape[2]
+            npp = s_frag // psz
+            lane = jnp.arange(psz, dtype=jnp.int32)
+            dest_row = jnp.where(jnp.arange(npp) < keep, 0,
+                                 block_row[:npp])
+            # bucketed prefill fragments can round up past the allocated
+            # run (-1 tail in block_row): those pages hold pure padding
+            # (positions already -1), redirect them to the trash page
+            dest_row = jnp.where(dest_row >= 0, dest_row, 0)
+            dest = (dest_row[:, None] * psz + lane).reshape(-1)
+            wipe_row = jnp.where(block_row >= 0, block_row, 0)
+            wipe_row = jnp.where(
+                jnp.arange(block_row.shape[0]) < keep, 0, wipe_row)
+            wipe = (wipe_row[:, None]
+                    * psz + lane).reshape(-1)   # page 0 wipe: harmless
+            kf = full.k.reshape(n_super, n_pages * psz, *full.k.shape[3:])
+            vf = full.v.reshape(n_super, n_pages * psz, *full.v.shape[3:])
+            pf = full.positions.reshape(n_super, n_pages * psz)
+            kf = kf.at[:, dest].set(one.k[:, 0].astype(kf.dtype))
+            vf = vf.at[:, dest].set(one.v[:, 0].astype(vf.dtype))
+            pf = pf.at[:, wipe].set(-1)
+            pf = pf.at[:, dest].set(one.positions[:, 0])
+            return PagedKVCache(kf.reshape(full.k.shape),
+                                vf.reshape(full.v.shape),
+                                pf.reshape(full.positions.shape),
+                                full.block_table)
+
+        return jax.tree.map(
+            splice, cache, frag,
+            is_leaf=lambda x: isinstance(x, (KVCache, PagedKVCache)))
+
+    @staticmethod
+    def _bind_impl(cache, block_row, slot):
+        """Block-table half of the fragment splice: map an
+        already-scattered page run into batch row `slot`. This is the ONLY
+        device work a two-pool decode admission pays (admit_ready) — the
+        KV itself was handed off at prefill completion."""
+        def bind(leaf):
+            if not isinstance(leaf, PagedKVCache):
+                return leaf
+            n_super = leaf.block_table.shape[0]
+            bt = lax.dynamic_update_slice_in_dim(
+                leaf.block_table,
+                jnp.broadcast_to(block_row,
+                                 (n_super, 1, block_row.shape[0])),
+                slot, axis=1)
+            return leaf._replace(block_table=bt)
+
+        return jax.tree.map(
+            bind, cache,
+            is_leaf=lambda x: isinstance(x, (KVCache, PagedKVCache)))
+
+    @staticmethod
     def _insert_impl(cache, frag, slot, block_row=None, keep=0):
         """Splice a batch-1 cache fragment into batch row `slot`.
 
         Dense leaves (rings, SSM/conv state, per-slot positions) carry
         batch at axis 1 (model.init_cache) and take a dynamic-update-slice.
-        Paged pool leaves take the page scatter instead: the fragment's
-        rows land at flat offsets `block_row[t // psz] · psz + t % psz`,
-        after wiping the positions of *every* page in `block_row` to -1 —
-        recycled pages still hold the previous owner's positions, which
-        would otherwise be visible to the attention mask. `block_row` is
-        the slot's (max_pages,) block-table row, -1-padded.
+        Paged pool leaves take `_scatter_impl`'s page scatter plus
+        `_bind_impl`'s block-table splice — the unified path runs both
+        halves in this one jitted program, the two-pool path runs them
+        separately (scatter at handoff, bind at decode admission); either
+        way the lowered writes are identical, which is why REPRO_DISAGG
+        can never change tokens."""
+        if block_row is not None:
+            cache = ServeEngine._scatter_impl(cache, frag, block_row, keep)
+            cache = ServeEngine._bind_impl(cache, block_row, slot)
 
-        `keep` (prefix sharing) is the count of leading block-row pages that
-        are cache-hit SHARED pages: they already hold the right KV, other
-        readers may be attending to them concurrently, and this slot must
-        never write them — both the wipe and the scatter redirect those
-        pages to the reserved trash page 0 (writes there are harmless by
-        the same convention unmapped decode writes rely on). A COW'd tail
-        page is NOT kept: its rows ride in the fragment (pre-loaded from
-        the donor) and the scatter into the request's own page IS the
-        copy-on-write."""
         def splice(full, one):
             if isinstance(full, PagedKVCache):
-                n_super, n_pages, psz = full.k.shape[:3]
-                s_frag = one.k.shape[2]
-                npp = s_frag // psz
-                lane = jnp.arange(psz, dtype=jnp.int32)
-                dest_row = jnp.where(jnp.arange(npp) < keep, 0,
-                                     block_row[:npp])
-                dest = (dest_row[:, None] * psz + lane).reshape(-1)
-                wipe_row = jnp.where(block_row >= 0, block_row, 0)
-                wipe_row = jnp.where(
-                    jnp.arange(block_row.shape[0]) < keep, 0, wipe_row)
-                wipe = (wipe_row[:, None]
-                        * psz + lane).reshape(-1)   # page 0 wipe: harmless
-                kf = full.k.reshape(n_super, n_pages * psz, *full.k.shape[3:])
-                vf = full.v.reshape(n_super, n_pages * psz, *full.v.shape[3:])
-                pf = full.positions.reshape(n_super, n_pages * psz)
-                kf = kf.at[:, dest].set(one.k[:, 0].astype(kf.dtype))
-                vf = vf.at[:, dest].set(one.v[:, 0].astype(vf.dtype))
-                pf = pf.at[:, wipe].set(-1)
-                pf = pf.at[:, dest].set(one.positions[:, 0])
-                bt = lax.dynamic_update_slice_in_dim(
-                    full.block_table,
-                    jnp.broadcast_to(block_row,
-                                     (n_super, 1, block_row.shape[0])),
-                    slot, axis=1)
-                return PagedKVCache(kf.reshape(full.k.shape),
-                                    vf.reshape(full.v.shape),
-                                    pf.reshape(full.positions.shape), bt)
+                return full          # handled above
             if isinstance(full, KVCache):
                 return KVCache(*(lax.dynamic_update_slice_in_dim(
                     f, o.astype(f.dtype), slot, axis=1)
@@ -304,6 +429,75 @@ class ServeEngine:
             fn = jax.jit(make_prefill_step(self.cfg, prefix_len))
             self._prefills[prefix_len] = fn
         return fn
+
+    def _bucketed_prefill_for(self, prefix_len: int):
+        """Jitted bucketed-prefill closure (train.step
+        make_bucketed_prefill_step); the padded token length is part of
+        jit's shape key, so one closure serves every bucket."""
+        fn = self._bucketed_prefills.get(prefix_len)
+        if fn is None:
+            fn = jax.jit(make_bucketed_prefill_step(self.cfg, prefix_len))
+            self._bucketed_prefills[prefix_len] = fn
+        return fn
+
+    def _prefill_request(self, scheduler, req, cache, greedy: bool, rng):
+        """Shared prefill body for the unified and two-pool paths: build
+        the dense fragment (prefix-cache load + COW fork included), run
+        the suffix prefill — bucketed when `bucketing_on()` — and pick the
+        first token. Returns (frag, first, row, keep, rng) where `row` is
+        the -1-padded (max_pages,) page run and `keep` the shared leading
+        page count (both None for ring engines)."""
+        paged = self.kv_layout == "paged"
+        shared = req.shared_tokens if paged else 0
+        suffix = req.prompt_len - shared
+        Tb = suffix
+        if self.bucketing_on():
+            cap = self.max_seq_len if paged else self.cache_len
+            b = _bucket_len(suffix)
+            if shared + b <= cap:
+                Tb = b
+        frag = (self.new_frag(shared + Tb) if paged
+                else self.new_cache(batch=1))
+        if shared:
+            # prefix-cache hit: pre-load the shared span's KV from the
+            # hit pages (plus the COW donor's partial tail) and prefill
+            # only the uncached suffix — TTFT stays honest, it times the
+            # load + suffix prefill actually paid
+            src = list(req.pages[:shared // self.page_size])
+            if req.cow_src is not None:
+                src.append(req.cow_src)
+            frag = self._load_prefix(
+                frag, cache, jnp.asarray(src, jnp.int32), shared)
+            if req.cow_src is not None:
+                # the donor's rows are in the fragment now; the scatter
+                # writes them into the request's own tail page (the
+                # copy), so the donor's copy-window lease can drop
+                scheduler.cow_done(req)
+        tokens = np.asarray(req.prompt[shared:], np.int32)
+        if Tb != suffix or self.bucketing_on():
+            tokens = np.pad(tokens, (0, Tb - suffix))
+            self._prefill_shapes.add((shared, Tb, True))
+            logits, frag = self._bucketed_prefill_for(shared)(
+                self.params, jnp.asarray(tokens)[None], frag,
+                jnp.asarray(suffix - 1, jnp.int32),
+                jnp.asarray(req.prompt_len, jnp.int32))
+        else:
+            self._prefill_shapes.add((shared, suffix, False))
+            logits, frag = self._prefill_for(shared)(
+                self.params, jnp.asarray(tokens)[None], frag, None)
+        if greedy:
+            first = int(np.asarray(jnp.argmax(logits[0, -1])))
+        else:
+            rng, k = jax.random.split(rng)
+            first = int(np.asarray(
+                jax.random.categorical(k, logits[0, -1])))
+        row = keep = None
+        if paged:
+            r = np.full((self.max_pages,), -1, np.int32)
+            r[:len(req.pages)] = req.pages
+            row = jnp.asarray(r)
+            keep = jnp.asarray(shared // self.page_size, jnp.int32)
+        return frag, first, row, keep, rng
 
     @staticmethod
     def _clear_slot_impl(cache, slot):
@@ -657,6 +851,19 @@ class ServeEngine:
         tok = jnp.zeros((B,), jnp.int32)
         pos = jnp.zeros((B,), jnp.int32)
         prefill_s = decode_s = 0.0
+        # per-phase wall split (honest accounting, DESIGN.md §10): handoff
+        # = the page scatter / block-table splice walls; decode_stall = the
+        # admission wall spent while ≥1 OTHER slot sat idle waiting — the
+        # decode-blocking component. Unified mode charges the whole
+        # prefill+insert to the stall (the slots genuinely wait on it);
+        # two-pool mode charges only the handoff sync, the part a real
+        # two-pool deployment (prefill on its own devices) would retain.
+        # Single-host caveat: both pools share this process's device, so
+        # the stall split is the modeled decode-blocking time, while
+        # wall_s/ITL remain real measurements.
+        handoff_s = decode_stall_s = 0.0
+        disagg = self.disagg_on()
+        mesh = shardlib.active_mesh()
         chunk_modes = {"exact": 0, "approx": 0}
         spec = self.spec_decoding_on()
         # a spec iteration emits 1..spec_k+1 tokens; size the chunk so its
@@ -699,75 +906,115 @@ class ServeEngine:
         while not scheduler.drained():
             if paged:
                 clear_freed()
-            for slot in scheduler.free_slots():
-                req = scheduler.admit(slot, now())
-                if req is None:
-                    break
-                if self._must_reject(req):
-                    # ring: a global-attention KV ring must never wrap (the
-                    # write would overwrite live prompt keys and silently
-                    # corrupt the request). Paged: the allocator found the
-                    # request can never fit the pool / block table. Retire
-                    # it as rejected — in-flight slots keep decoding.
-                    scheduler.reject(slot, now())
-                    continue
-                t_p = now()
-                frag = (self.new_frag(req.prompt_len) if paged
-                        else self.new_cache(batch=1))
-                shared = req.shared_tokens if paged else 0
-                if shared:
-                    # prefix-cache hit: pre-load the shared span's KV from
-                    # the hit pages (plus the COW donor's partial tail) and
-                    # prefill only the uncached suffix — TTFT below stays
-                    # honest, it times the load + suffix prefill actually
-                    # paid, not a full prefill that never ran
-                    src = list(req.pages[:shared // self.page_size])
-                    if req.cow_src is not None:
-                        src.append(req.cow_src)
-                    frag = self._load_prefix(
-                        frag, cache, jnp.asarray(src, jnp.int32), shared)
-                    if req.cow_src is not None:
-                        # the donor's rows are in the fragment now; the
-                        # insert below writes them into the request's own
-                        # tail page (the copy), so the donor's copy-window
-                        # lease can drop
-                        scheduler.cow_done(req)
-                logits, frag = self._prefill_for(shared)(
-                    self.params,
-                    jnp.asarray(req.prompt[shared:], jnp.int32)[None],
-                    frag, None)
-                if greedy:
-                    first = int(np.asarray(jnp.argmax(logits[0, -1])))
-                else:
-                    rng, k = jax.random.split(rng)
-                    first = int(np.asarray(
-                        jax.random.categorical(k, logits[0, -1])))
-                if paged:
-                    row = np.full((self.max_pages,), -1, np.int32)
-                    row[:len(req.pages)] = req.pages
-                    cache = self._insert(cache, frag, slot,
-                                         jnp.asarray(row),
-                                         jnp.asarray(
-                                             shared // self.page_size,
-                                             jnp.int32))
-                    # register this prompt's pages for reuse BEFORE the
-                    # scheduler sees the first token: a first-token EOS
-                    # retires the request immediately, and the registered
-                    # pages must park as cached, not return to the free
-                    # list
+            if disagg:
+                # decode-pool admissions: bind already-prefilled requests
+                # off the ready queue — a block-table splice, never
+                # prefill compute — so free slots refill between chunks
+                # at handoff cost only
+                for slot in scheduler.free_slots():
+                    req = scheduler.admit_ready(slot, now())
+                    if req is None:
+                        break
+                    t_h = now()
+                    r = np.full((self.max_pages,), -1, np.int32)
+                    r[:len(req.pages)] = req.pages
+                    cache = self._bind(cache, jnp.asarray(r), slot)
+                    # first token came from finish_prefill; resume after it
+                    tok = tok.at[slot].set(req.tokens[0])
+                    pos = pos.at[slot].set(req.prompt_len)
+                    handoff_s += now() - t_h
+                # prefill pool: up to `prefill_workers` prefills per chunk
+                # interval, stopping once the ready queue could refill
+                # every slot (prefilling further ahead only pins pages
+                # earlier for no latency win)
+                n_pf = 0
+                while (n_pf < self.prefill_workers
+                       and scheduler.ready_depth() < B):
+                    req = scheduler.begin_prefill(now())
+                    if req is None:
+                        break
+                    if self._must_reject(req):
+                        # the allocator found the request can never fit
+                        # the pool / block table — retire it as rejected
+                        scheduler.reject_prefill(req, now())
+                        continue
+                    t_p = now()
+                    frag, first, row, keep, rng = self._prefill_request(
+                        scheduler, req, cache, greedy, rng)
+                    dt = now() - t_p
+                    prefill_s += dt
+                    # the handoff: reshard the staged fragment onto the
+                    # pool's layout (page dim sharded over data axes —
+                    # whole pages move, no per-token traffic), scatter it
+                    # in, and sync — the one wall decode can block on
+                    t_h = now()
+                    if mesh is not None:
+                        frag = shardlib.reshard_handoff(frag, mesh,
+                                                        self.cfg)
+                    cache = self._scatter(cache, frag, row, keep)
+                    jax.block_until_ready(cache)
+                    dt_h = now() - t_h
+                    handoff_s += dt_h
+                    if scheduler.num_active() > 0:
+                        decode_stall_s += dt_h
+                    # register BEFORE the scheduler sees the first token:
+                    # a first-token EOS retires the request immediately,
+                    # and the registered pages must park as cached, not
+                    # return to the free list
                     scheduler.pages.prefix_register(req.prompt, req.pages,
                                                     req.tier)
-                else:
-                    cache = self._insert(cache, frag, slot)
-                tok = tok.at[slot].set(first)
-                pos = pos.at[slot].set(req.prompt_len)
-                dt = now() - t_p
-                prefill_s += dt
-                scheduler.start(slot, first, now(), prefill_s=dt)
+                    scheduler.finish_prefill(req, first, now(),
+                                             prefill_s=dt)
+                    n_pf += 1
+            else:
+                for slot in scheduler.free_slots():
+                    req = scheduler.admit(slot, now())
+                    if req is None:
+                        break
+                    if self._must_reject(req):
+                        # ring: a global-attention KV ring must never wrap
+                        # (the write would overwrite live prompt keys and
+                        # silently corrupt the request). Paged: the
+                        # allocator found the request can never fit the
+                        # pool / block table. Retire it as rejected —
+                        # in-flight slots keep decoding.
+                        scheduler.reject(slot, now())
+                        continue
+                    t_p = now()
+                    frag, first, row, keep, rng = self._prefill_request(
+                        scheduler, req, cache, greedy, rng)
+                    t_h = now()
+                    if paged:
+                        cache = self._insert(cache, frag, slot, row, keep)
+                        # register this prompt's pages for reuse BEFORE
+                        # the scheduler sees the first token: a first-
+                        # token EOS retires the request immediately, and
+                        # the registered pages must park as cached, not
+                        # return to the free list
+                        scheduler.pages.prefix_register(req.prompt,
+                                                        req.pages, req.tier)
+                    else:
+                        cache = self._insert(cache, frag, slot)
+                    # dispatch-only wall: the unified splice overlaps the
+                    # next admission, unlike the two-pool synced handoff
+                    handoff_s += now() - t_h
+                    tok = tok.at[slot].set(first)
+                    pos = pos.at[slot].set(req.prompt_len)
+                    dt = now() - t_p
+                    prefill_s += dt
+                    if scheduler.num_active() > 1:
+                        # every other live slot sat idle through this
+                        # admission's prefill — the stall disaggregation
+                        # exists to remove
+                        decode_stall_s += dt
+                    scheduler.start(slot, first, now(), prefill_s=dt)
             if paged:
                 clear_freed()
 
             if scheduler.num_active() == 0:
+                if scheduler.ready_depth() > 0:
+                    # staged-but-unbound work: the next pass binds it
+                    continue
                 # queue non-empty but nothing has arrived yet: wait for the
                 # next arrival instead of spinning
                 nxt = scheduler.next_arrival()
@@ -817,7 +1064,16 @@ class ServeEngine:
         summary |= {"prefill_s": round(prefill_s, 4),
                     "decode_s": round(decode_s, 4),
                     "compile_s": round(compile_s, 4),
-                    "wall_s": round(now(), 4)}
+                    "wall_s": round(now(), 4),
+                    # per-phase utilization split (see the accounting
+                    # comment at the loop head): busy aliases keep the
+                    # disagg A/B readable next to the stall/handoff walls
+                    "prefill_busy_s": round(prefill_s, 4),
+                    "decode_busy_s": round(decode_s, 4),
+                    "handoff_s": round(handoff_s, 4),
+                    "decode_stall_s": round(decode_stall_s, 4),
+                    "prefill_compiles": len(self._prefill_shapes),
+                    "disagg": disagg}
         if spec_chunks:
             summary |= {"spec_k": self.spec_k,
                         "spec_draft_layers": self.spec_draft_layers,

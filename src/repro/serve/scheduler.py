@@ -40,6 +40,17 @@ Semantics
   `observe(..., mode=)` records which datapath produced each token, so
   the summary can report per-(tier, mode) token counts for the energy
   model (core/energy.py tier_energy_summary).
+* **Two-pool mode** (disaggregated serving, DESIGN.md §10): the engine
+  splits admission into a PREFILL pool (`begin_prefill` pulls arrived
+  requests, takes their page leases, and `finish_prefill` stages the
+  prefilled request + first token on a **ready queue**) and a DECODE pool
+  (`admit_ready` binds staged requests to free slots between chunks — the
+  only device work left is the block-table splice, so decode admissions
+  never wait on prefill compute). Staging pages ARE pool pages: a request
+  holds its leases from prefill admission through the ready queue to
+  retirement, so the `pages_leaked == 0` invariant holds through the
+  handoff. `ReplicaRouter` adds pick-least-loaded routing across N
+  data-parallel engine replicas behind one arrival stream.
 """
 from __future__ import annotations
 
@@ -430,9 +441,15 @@ class SlotScheduler:
         self.eos_id = eos_id
         self.pages = pages        # set by paged engines (serve() injects one)
         self.pending: deque[Request] = deque()
+        # two-pool mode only (begin_prefill/finish_prefill/admit_ready):
+        # prefilled requests staged for a decode slot, FIFO by prefill
+        # completion; unified engines never touch it
+        self.ready: deque[Request] = deque()
         self.slots = [_Slot() for _ in range(n_slots)]
         self.finished: list[Request] = []
         self.depth_samples: list[int] = []
+        self.ready_depth_samples: list[int] = []
+        self._two_pool = False    # flipped by begin_prefill; gates summary
         self.page_util_samples: list[float] = []
         self.page_blocks = 0      # requests that ever waited for free pages
         self._blocked_rids: set[int] = set()
@@ -508,6 +525,44 @@ class SlotScheduler:
                     return i
         return 0
 
+    def _page_transaction(self, cand: Request) -> bool:
+        """Page-gate one candidate and, on success, take its leases and
+        fill `pages/shared_tokens/cow_src` in place. Returns False when
+        the candidate must stay queued (could fit an empty pool but not
+        the current one); a candidate that can NEVER fit passes with
+        `pages=None` for the engine to reject. Shared by the unified path
+        (`admit`) and the prefill pool (`begin_prefill`)."""
+        tokens = cand.prompt_len + cand.max_new_tokens
+        if not self.pages.fits_ever(tokens):
+            cand.pages = None
+            return True
+        needed = self.pages.pages_needed(tokens)
+        hit, shared, donor = self.pages.prefix_lookup(cand.prompt, cand.tier)
+        fresh = needed - len(hit)
+        pinned = set(hit) | ({donor} if donor is not None else set())
+        if fresh > self.pages.allocatable(pinned):
+            # count *requests* that waited, not poll attempts — the
+            # loop re-asks every chunk tick while the head is blocked
+            if cand.rid not in self._blocked_rids:
+                self._blocked_rids.add(cand.rid)
+                self.page_blocks += 1
+            return False
+        # transaction: pin the hit pages (+ COW donor) with leases FIRST
+        # so the fresh alloc's eviction pass cannot reclaim them, then
+        # allocate the remainder — the allocatable() gate above
+        # guarantees this succeeds
+        if pinned:
+            self.pages.retain(hit + ([donor] if donor is not None else []))
+        fresh_pages = self.pages.alloc(fresh)
+        assert fresh_pages is not None, (fresh, "gate lied")
+        cand.pages = hit + fresh_pages
+        cand.shared_tokens = shared
+        cand.cow_src = donor
+        if shared:
+            self.prefix_hits += 1
+            self.prefix_tokens_saved += shared
+        return True
+
     def admit(self, slot_idx: int, now: float) -> Request | None:
         """Admit the next pending request (see `_select_pending`) into
         `slot_idx` if one has arrived by `now`.
@@ -521,48 +576,12 @@ class SlotScheduler:
         if i is None:
             return None
         cand = self.pending[i]
-        if self.pages is not None:
-            tokens = cand.prompt_len + cand.max_new_tokens
-            fits = self.pages.fits_ever(tokens)
-            needed = self.pages.pages_needed(tokens)
-            hit: list[int] = []
-            shared = 0
-            donor = None
-            if fits:
-                hit, shared, donor = self.pages.prefix_lookup(
-                    cand.prompt, cand.tier)
-            fresh = needed - len(hit)
-            pinned = set(hit) | ({donor} if donor is not None else set())
-            if fits and fresh > self.pages.allocatable(pinned):
-                # count *requests* that waited, not poll attempts — the
-                # loop re-asks every chunk tick while the head is blocked
-                if cand.rid not in self._blocked_rids:
-                    self._blocked_rids.add(cand.rid)
-                    self.page_blocks += 1
-                return None
+        if self.pages is not None and not self._page_transaction(cand):
+            return None
         req = cand
         del self.pending[i]
         if i > 0:
             self.tier_affine_picks += 1
-        if self.pages is not None:
-            if not fits:
-                req.pages = None
-            else:
-                # transaction: pin the hit pages (+ COW donor) with leases
-                # FIRST so the fresh alloc's eviction pass cannot reclaim
-                # them, then allocate the remainder — the allocatable()
-                # gate above guarantees this succeeds
-                if pinned:
-                    self.pages.retain(hit + ([donor] if donor is not None
-                                             else []))
-                fresh_pages = self.pages.alloc(fresh)
-                assert fresh_pages is not None, (fresh, "gate lied")
-                req.pages = hit + fresh_pages
-                req.shared_tokens = shared
-                req.cow_src = donor
-                if shared:
-                    self.prefix_hits += 1
-                    self.prefix_tokens_saved += shared
         req.slot = slot_idx
         req.t_admitted = now
         if self._slot_used[slot_idx]:
@@ -592,6 +611,84 @@ class SlotScheduler:
         self._accept(slot, req, int(first_token), now)
 
     # ------------------------------------------------------------------
+    # two-pool admission (disaggregated serving, DESIGN.md §10)
+    # ------------------------------------------------------------------
+
+    def ready_depth(self) -> int:
+        return len(self.ready)
+
+    def begin_prefill(self, now: float) -> Request | None:
+        """Pull the next arrived request into the PREFILL pool. Page-gated
+        exactly like `admit` — staging pages ARE pool pages (the handoff
+        moves ownership, not bytes between pools), so a request holds its
+        leases from here through the ready queue to retirement and the
+        `pages_leaked == 0` invariant holds at every point. Selection is
+        plain FIFO among arrived requests: tier affinity is applied
+        downstream at `admit_ready`, where the decode batch whose tier
+        matters actually lives. Returns None when nothing has arrived by
+        `now` or the head is blocked on pages. A returned request with
+        `pages=None` can never fit — retire it via `reject_prefill`."""
+        self._two_pool = True
+        if not self.pending or self.pending[0].arrival_time > now:
+            return None
+        cand = self.pending[0]
+        if self.pages is not None and not self._page_transaction(cand):
+            return None
+        self.pending.popleft()
+        cand.t_admitted = now
+        return cand
+
+    def reject_prefill(self, req: Request, now: float,
+                       reason: str = "rejected") -> Request:
+        """Retire a prefill-pool request without serving it (it can never
+        fit the pool / block table); it never held a decode slot."""
+        self._finish(None, req, reason, now)
+        return req
+
+    def finish_prefill(self, req: Request, first_token: int, now: float,
+                       prefill_s: float = 0.0) -> bool:
+        """Prefill-pool completion: record TTFT and the first generated
+        token, then stage the request on the ready queue for the decode
+        pool. A first-token EOS (or a 1-token budget) finishes the request
+        right here — its pages free (or park as prefix-cached) without
+        ever touching a decode slot. Returns True iff staged."""
+        req.t_first_token = now
+        req.prefill_s = prefill_s
+        self._accept(None, req, int(first_token), now)
+        if req.t_done is None:
+            self.ready.append(req)
+            return True
+        return False
+
+    def admit_ready(self, slot_idx: int, now: float) -> Request | None:
+        """Bind the next ready (already-prefilled) request to a free
+        decode slot. Tier-affine like `_select_pending` — a staged request
+        matching the active batch's homogeneous tier is preferred — so the
+        two-pool engine phase-separates mixed streams exactly like the
+        unified one. The only device work this admission needs is the
+        block-table splice (engine._bind): the KV pages were handed off at
+        prefill completion."""
+        if not self.ready:
+            return None
+        i = 0
+        tier = self._active_tier()
+        if tier is not None and self.ready[0].tier != tier:
+            for j, r in enumerate(self.ready):
+                if r.tier == tier:
+                    i = j
+                    break
+        req = self.ready[i]
+        del self.ready[i]
+        if i > 0:
+            self.tier_affine_picks += 1
+        req.slot = slot_idx
+        if self._slot_used[slot_idx]:
+            self.refills += 1
+        self._slot_used[slot_idx] = True
+        self.slots[slot_idx].req = req
+        return req
+
+    # ------------------------------------------------------------------
     # decode ticks
     # ------------------------------------------------------------------
 
@@ -608,7 +705,8 @@ class SlotScheduler:
         return sum(1 for s in self.slots if s.req is not None)
 
     def drained(self) -> bool:
-        return not self.pending and self.num_active() == 0
+        return (not self.pending and not self.ready
+                and self.num_active() == 0)
 
     def observe(self, chunk_tokens: np.ndarray, now: float,
                 mode: str = "exact"):
@@ -632,6 +730,7 @@ class SlotScheduler:
                 self._accept(slot, slot.req, int(chunk_tokens[s, i]), now,
                              mode=mode)
         self.depth_samples.append(len(self.pending))
+        self.ready_depth_samples.append(len(self.ready))
         if self.pages is not None and self.pages.capacity:
             self.page_util_samples.append(
                 self.pages.in_use / self.pages.capacity)
@@ -665,12 +764,15 @@ class SlotScheduler:
                     self._accept(slot, slot.req, int(chunk_tokens[s, i, t]),
                                  now, mode=mode)
         self.depth_samples.append(len(self.pending))
+        self.ready_depth_samples.append(len(self.ready))
         if self.pages is not None and self.pages.capacity:
             self.page_util_samples.append(
                 self.pages.in_use / self.pages.capacity)
 
-    def _accept(self, slot: _Slot, req: Request, token: int, now: float,
-                mode: str = "exact"):
+    def _accept(self, slot: _Slot | None, req: Request, token: int,
+                now: float, mode: str = "exact"):
+        # slot=None: prefill-pool request not yet bound to a decode slot
+        # (two-pool mode's finish_prefill)
         req.tokens.append(token)
         key = (req.tier, mode)
         self.tier_mode_tokens[key] = self.tier_mode_tokens.get(key, 0) + 1
@@ -687,11 +789,13 @@ class SlotScheduler:
         self.pages.cow_fork(req.cow_src)
         req.cow_src = None
 
-    def _finish(self, slot: _Slot, req: Request, reason: str, now: float):
+    def _finish(self, slot: _Slot | None, req: Request, reason: str,
+                now: float):
         req.finish_reason = reason
         req.t_done = now
         self.finished.append(req)
-        slot.req = None
+        if slot is not None:
+            slot.req = None
         if self.pages is not None and req.pages:
             # every retirement path — EOS, budget, rejection — returns the
             # request's pages; `req.pages` stays as the record of what ran
@@ -701,7 +805,8 @@ class SlotScheduler:
                 # rejection): drop the donor's copy-window lease too
                 self.pages.free([req.cow_src])
                 req.cow_src = None
-        self._freed_slots.append(req.slot)
+        if req.slot >= 0:
+            self._freed_slots.append(req.slot)
 
     def drain_freed(self) -> list[int]:
         """Slots freed since the last call (any retirement reason). Paged
@@ -730,6 +835,13 @@ class SlotScheduler:
             if self.depth_samples else 0.0,
             "max_queue_depth": max(self.depth_samples, default=0),
         }
+        if self._two_pool:
+            # ready-queue depth percentiles (sampled per decode chunk,
+            # like depth_samples): how far ahead the prefill pool runs
+            rd = self.ready_depth_samples or [0]
+            out["ready_depth_p50"] = float(np.percentile(rd, 50))
+            out["ready_depth_p90"] = float(np.percentile(rd, 90))
+            out["ready_depth_max"] = int(max(rd))
         if ttfts:
             out["ttft_mean_s"] = float(np.mean(ttfts))
             out["ttft_max_s"] = float(np.max(ttfts))
@@ -777,3 +889,34 @@ class SlotScheduler:
                     "prefix_evictions": self.pages.prefix_evictions,
                 }
         return out
+
+
+class ReplicaRouter:
+    """Pick-least-loaded routing across N data-parallel engine replicas
+    behind one arrival stream (DESIGN.md §10). Load is the outstanding
+    token estimate — prompt plus decode budget of everything routed to a
+    replica and not yet reported complete — so a burst of long-prompt
+    requests spreads instead of round-robining onto one replica. Ties
+    break to the lowest index, which makes routing a pure function of the
+    submitted stream: replica assignment never depends on wall clock, so
+    the REPRO_DISAGG digest contract extends across replicas."""
+
+    def __init__(self, n_replicas: int):
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas={n_replicas}; want >= 1")
+        self.n = int(n_replicas)
+        self.outstanding = [0] * self.n   # token estimate in flight
+        self.routed = [0] * self.n        # requests sent, lifetime
+
+    def route(self, prompt_len: int, max_new_tokens: int) -> int:
+        i = min(range(self.n), key=lambda j: (self.outstanding[j], j))
+        self.outstanding[i] += int(prompt_len) + int(max_new_tokens)
+        self.routed[i] += 1
+        return i
+
+    def complete(self, replica: int, prompt_len: int, max_new_tokens: int):
+        """Report a routed request finished. Online servers call this per
+        retirement; the offline driver routes the whole stream up-front
+        against the submit-time estimates and never calls it."""
+        self.outstanding[replica] -= int(prompt_len) + int(max_new_tokens)
+        assert self.outstanding[replica] >= 0, (replica, "over-completed")

@@ -93,6 +93,53 @@ def make_prefill_step(cfg: ArchConfig, prefix_len: int = 0):
     return prefill
 
 
+def make_bucketed_prefill_step(cfg: ArchConfig, prefix_len: int = 0):
+    """Bucketed prefill for the serve engine's prompt-length bucketing
+    (DESIGN.md §10 satellite): `tokens` is a suffix right-padded up to a
+    bucket length, so mixed prompt lengths share one jit trace per
+    (prefix_len, bucket) instead of retracing per distinct length.
+
+    prefill(params, tokens, cache, last_idx, valid_len) →
+    (logits_last, cache):
+
+    * `last_idx` (traced) is the real suffix's last row — the lm_head runs
+      on that row, not the padded block's end (model.forward last_index);
+    * `valid_len` (traced) is the real ABSOLUTE prompt length: every cache
+      row at position >= valid_len had its K/V computed from padding, so
+      its position is forced to -1 after the forward — invisible to the
+      attention mask (layers.decode_attention masks kv_positions >= 0),
+      exactly like an empty ring entry, and overwritten in place once the
+      request decodes past it. Real rows never see the padded ones
+      (causal masking), so their K/V and the selected logits row come out
+      of the same arithmetic as an exact-length prefill.
+
+    Only sound for attention-only stacks: right-padding would advance
+    ssm/hybrid recurrent state through garbage tokens, and local-window
+    ring writes past the real length could wrap onto live rows — the
+    engine gates bucketing off for those (ServeEngine.bucketing_on)."""
+    from repro.models.layers import KVCache
+
+    def prefill(params, tokens, cache, last_idx, valid_len, frontend=None):
+        logits, cache, _ = M.forward(params, cfg, tokens, cache=cache,
+                                     frontend_embeds=frontend,
+                                     last_only=True, last_index=last_idx,
+                                     prefix_len=prefix_len)
+
+        def mask(leaf):
+            if not isinstance(leaf, KVCache):
+                return leaf
+            S = leaf.positions.shape[-1]
+            keep = jnp.arange(S, dtype=jnp.int32) < valid_len
+            return leaf._replace(
+                positions=jnp.where(keep, leaf.positions, -1))
+
+        cache = jax.tree.map(mask, cache,
+                             is_leaf=lambda x: isinstance(x, KVCache))
+        return logits, cache
+
+    return prefill
+
+
 def make_serve_step(cfg: ArchConfig):
     """One decode step: (params, token (B,1), cache, pos (B,), [frontend]) →
     (logits (B,1,V), new_cache). The `decode_*`/`long_*` dry-run target.

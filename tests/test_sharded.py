@@ -139,3 +139,100 @@ def test_paged_decode_cell_lowers_on_mesh():
     res = json.loads(out.stdout.strip().splitlines()[-1])
     assert res["ok_pages"], res
     assert res["hlo_chars"] > 0
+
+
+_HANDOFF_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import reduced_config
+from repro.models import model as M
+from repro.models.layers import KVCache, PagedKVCache
+from repro.parallel import sharding as S
+from repro.serve.engine import ServeEngine
+from repro.train.step import make_prefill_step
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+cfg = reduced_config("qwen2.5-14b")
+psz = 8
+pool_pages = 12            # % data size (4) == 0: the page dim must shard
+B, T = 2, 64
+cache = M.init_cache(cfg, B, T, dtype=jnp.float32, paged=(pool_pages, psz))
+
+# the staged fragment: a real batch-1 prefill run (what the prefill pool
+# hands off at a two-pool completion); 19 tokens -> 3 pages
+plen = 19
+cap = -(-plen // psz) * psz
+params = M.init_params(jax.random.key(0), cfg)
+toks = jax.random.randint(jax.random.key(1), (1, plen), 0, cfg.vocab_size,
+                          dtype=jnp.int32)
+_, frag = jax.jit(make_prefill_step(cfg))(
+    params, toks, M.init_cache(cfg, 1, cap, dtype=jnp.float32))
+row = np.full((T // psz,), -1, np.int32)
+row[:3] = [2, 3, 4]
+row = jnp.asarray(row)
+slot = jnp.asarray(1, jnp.int32)
+keep = jnp.asarray(0, jnp.int32)
+
+# unsharded reference: the unified engine's fused in-place insert
+ref = jax.jit(ServeEngine._insert_impl)(cache, frag, slot, row, keep)
+
+# pool sharding: page dim over the data axis, block table replicated
+cspecs = S.cache_specs(cfg, cache, mesh, B)
+pool = [s for s in jax.tree.leaves(
+            cspecs, is_leaf=lambda x: isinstance(x, PagedKVCache))
+        if isinstance(s, PagedKVCache)][0]
+ok_pool = pool.k[1] == ("data",) and pool.block_table == P(None, None, None)
+
+# fragment sharding: token dim REPLICATED over data (whole-page handoff —
+# each data shard keeps its local pages at the scatter), heads over model
+fspecs = S.handoff_frag_specs(cfg, frag, mesh)
+kv = [s for s in jax.tree.leaves(
+          fspecs, is_leaf=lambda x: isinstance(x, KVCache))
+      if isinstance(s, KVCache)][0]
+ok_frag = ("data" not in jax.tree.leaves(tuple(kv.k))
+           and "model" in jax.tree.leaves(tuple(kv.k)))
+
+# reshard_handoff is layout-only: bit-identical content
+frag_s = S.reshard_handoff(frag, mesh, cfg)
+ok_reshard = all(np.array_equal(np.asarray(a), np.asarray(b))
+                 for a, b in zip(jax.tree.leaves(frag),
+                                 jax.tree.leaves(frag_s)))
+
+# the same insert under SPMD on the sharded pool + resharded fragment
+cache_s = jax.device_put(cache, jax.tree.map(
+    lambda s: NamedSharding(mesh, s), cspecs))
+with mesh:
+    out = jax.jit(ServeEngine._insert_impl)(cache_s, frag_s, slot, row, keep)
+ok_equal = all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(out)))
+
+bt = np.asarray(jax.tree.leaves(
+    out, is_leaf=lambda x: isinstance(x, PagedKVCache))[0].block_table)
+ok_bind = list(bt[0, 1, :3]) == [2, 3, 4]
+
+print(json.dumps({"ok_pool": bool(ok_pool), "ok_frag": bool(ok_frag),
+                  "ok_reshard": bool(ok_reshard), "ok_equal": bool(ok_equal),
+                  "ok_bind": bool(ok_bind), "k_spec": str(pool.k),
+                  "frag_k_spec": str(kv.k)}))
+"""
+
+
+@pytest.mark.slow
+def test_handoff_reshard_bitidentical_on_mesh():
+    """Two-pool KV-page handoff under SPMD (DESIGN.md §10): on a 4x2
+    (data, model) mesh the pool's page dim shards over `data` while the
+    staged fragment keeps its token dim replicated (handoff_frag_specs —
+    whole pages land on whichever shard owns them), `reshard_handoff` is
+    a pure layout move, and the scatter+bind splice produces a pool
+    bit-identical to the unsharded unified insert."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _HANDOFF_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    for key in ("ok_pool", "ok_frag", "ok_reshard", "ok_equal", "ok_bind"):
+        assert res[key], res
